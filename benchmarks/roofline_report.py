@@ -1,0 +1,115 @@
+"""Roofline report: aggregates experiments/dryrun/*.json into the
+EXPERIMENTS.md §Roofline table (one row per arch x shape, single-pod)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(dirpath="experiments/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(dirpath, "*__sp.json"))):
+        d = json.load(open(f))
+        rows.append(d)
+    rows.sort(key=lambda d: (d["arch"], ORDER.index(d["shape"])))
+    return rows
+
+
+def fmt_row(d):
+    r = d.get("roofline", d["uncorrected"])
+    mem = d["memory"]
+    peak = (mem["argument_bytes_per_device"] + mem["temp_bytes_per_device"]
+            + mem["output_bytes_per_device"] - mem["alias_bytes_per_device"])
+    tc, tm, tl = r["t_compute"], r["t_memory"], r["t_collective"]
+    dom = max(tc, tm, tl)
+    frac = tc / dom if dom else 0.0
+    ratio = d.get("useful_flops_ratio", float("nan"))
+    return {
+        "arch": d["arch"], "shape": d["shape"],
+        "t_compute_ms": tc * 1e3, "t_memory_ms": tm * 1e3,
+        "t_collective_ms": tl * 1e3, "bottleneck": r["bottleneck"],
+        "roofline_frac": frac,                 # compute-time / dominant-time
+        "useful_flops_ratio": ratio,
+        "mem_gib": peak / 2**30,
+        "coll": r.get("coll_by_type", {}),
+    }
+
+
+def table(rows):
+    hdr = (f"{'arch':24s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+           f"{'t_coll':>9s} {'bound':>10s} {'RLfrac':>6s} {'useful':>6s} "
+           f"{'GiB/dev':>7s}")
+    lines = [hdr, "-" * len(hdr)]
+    for d in rows:
+        f = fmt_row(d)
+        lines.append(
+            f"{f['arch']:24s} {f['shape']:12s} {f['t_compute_ms']:8.2f}m "
+            f"{f['t_memory_ms']:8.2f}m {f['t_collective_ms']:8.2f}m "
+            f"{f['bottleneck']:>10s} {f['roofline_frac']:6.2f} "
+            f"{f['useful_flops_ratio']:6.2f} {f['mem_gib']:7.2f}")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")
+    print(table(rows))
+    # candidates
+    fr = [(fmt_row(d)["roofline_frac"], d["arch"], d["shape"]) for d in rows]
+    fr.sort()
+    print("\nworst roofline fraction:", fr[:5])
+    cb = [(fmt_row(d)["t_collective_ms"]
+           / max(sum((fmt_row(d)[k] for k in
+                      ("t_compute_ms", "t_memory_ms"))), 1e-9),
+           d["arch"], d["shape"]) for d in rows]
+    cb.sort(reverse=True)
+    print("most collective-bound:", cb[:5])
+
+
+def _advice(f):
+    b = f["bottleneck"]
+    if b == "collective":
+        return ("shrink weight/cache gathers: TP-resident weights, "
+                "sequence-sharded cache (see §Perf serve_seqcache)")
+    if b == "memory":
+        if f["shape"] in ("decode_32k", "long_500k"):
+            return ("fuse cache read+score+update (Pallas decode_gqa); "
+                    "avoid f32 dot-operand converts (TPU-native bf16)")
+        return ("fuse elementwise chains / remat policy; larger per-device "
+                "batch amortizes weight traffic")
+    return "increase arithmetic intensity (larger tiles, fewer reshards)"
+
+
+def markdown(rows):
+    out = ["| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | bound "
+           "| useful-FLOPs | GiB/dev | lever |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for d in rows:
+        f = fmt_row(d)
+        out.append(
+            f"| {f['arch']} | {f['shape']} | {f['t_compute_ms']:.1f} "
+            f"| {f['t_memory_ms']:.1f} | {f['t_collective_ms']:.1f} "
+            f"| {f['bottleneck']} | {f['useful_flops_ratio']:.2f} "
+            f"| {f['mem_gib']:.1f} | {_advice(f)} |")
+    return "\n".join(out)
+
+
+def mp_summary(dirpath="experiments/dryrun"):
+    import glob as g
+    out = []
+    for fp in sorted(g.glob(os.path.join(dirpath, "*__mp.json"))):
+        d = json.load(open(fp))
+        mem = d["memory"]
+        peak = (mem["argument_bytes_per_device"] + mem["temp_bytes_per_device"]
+                + mem["output_bytes_per_device"]
+                - mem["alias_bytes_per_device"]) / 2**30
+        out.append((d["arch"], d["shape"], round(peak, 2),
+                    d["compile_s"]))
+    return out
+
+
+if __name__ == "__main__":
+    main()

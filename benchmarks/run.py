@@ -1,0 +1,190 @@
+"""Benchmark harness — one entry per paper table/figure + kernel micros +
+the dry-run roofline digest. Prints ``name,us_per_call,derived`` CSV.
+
+Fast by default (CPU-sized runs proving each harness end-to-end); set
+BENCH_FULL=1 for the long validation pass (also available as
+``python -m experiments.run_paper_validation``).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+FULL = os.environ.get("BENCH_FULL", "0") == "1"
+
+
+def _timed(fn, *a, **kw):
+    t0 = time.perf_counter()
+    out = fn(*a, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+def bench_table2_accuracy():
+    from benchmarks.paper_experiments import table2_accuracy
+    rates = (0.95, 0.75, 0.5) if FULL else (0.75,)
+    rounds = 25 if FULL else 6
+    out, us = _timed(table2_accuracy, rates=rates, rounds=rounds,
+                     n_data=1200 if FULL else 500)
+    inv = np.mean([v[0] for (m, r), v in out.items() if m == "invariant"])
+    rnd = np.mean([v[0] for (m, r), v in out.items() if m == "random"])
+    return us, f"acc_invariant={inv:.3f};acc_random={rnd:.3f}"
+
+
+def bench_fig4a_straggler_time():
+    from benchmarks.paper_experiments import fig4a_straggler_time
+    out, us = _timed(fig4a_straggler_time, rounds=10 if FULL else 5,
+                     n_data=400)
+    return us, (f"before={out['t_straggler_before']:.2f}s;"
+                f"after={out['t_straggler_after']:.2f}s;"
+                f"target={out['t_target']:.2f}s;"
+                f"within10pct={out['within_10pct']}")
+
+
+def bench_fig4b_dynamic():
+    from benchmarks.paper_experiments import fig4b_dynamic_stragglers
+    out, us = _timed(fig4b_dynamic_stragglers, rounds=12 if FULL else 8,
+                     n_data=400)
+    return us, (f"speedup_vs_baseline={out['speedup_vs_baseline']:.3f};"
+                f"speedup_vs_static={out['speedup_vs_static']:.3f}")
+
+
+def bench_fig6_invariant_evolution():
+    from benchmarks.paper_experiments import fig6_invariant_evolution
+    out, us = _timed(fig6_invariant_evolution, rounds=12 if FULL else 6,
+                     n_data=400)
+    return us, (f"frac_at_30pct={out['frac_at_30pct_training']:.3f};"
+                f"final={out['final_frac']:.3f}")
+
+
+def bench_table3_threshold():
+    from benchmarks.paper_experiments import table3_threshold
+    out, us = _timed(table3_threshold, rounds=5 if FULL else 3, n_data=400)
+    s = ";".join(f"th{t}={v:.3f}" for t, v in out.items())
+    return us, s
+
+
+def bench_fig5_scalability():
+    from benchmarks.paper_experiments import fig5_scalability
+    out, us = _timed(fig5_scalability,
+                     n_clients=20 if FULL else 8,
+                     rounds=10 if FULL else 4,
+                     n_data=1000 if FULL else 600)
+    return us, ";".join(f"{m}={v['accuracy']:.3f}" for m, v in out.items()
+                        if v["accuracy"] == v["accuracy"])
+
+
+def bench_kernel_invariant_stats():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.ops import invariant_stats
+    k = jax.random.PRNGKey(0)
+    w0 = jax.random.normal(k, (1024, 1024), jnp.float32)
+    w1 = w0 + 0.01
+    invariant_stats(w0, w1).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(3):
+        invariant_stats(w0, w1).block_until_ready()
+    us = (time.perf_counter() - t0) / 3 * 1e6
+    return us, "shape=1024x1024;interpret=True"
+
+
+def bench_kernel_masked_ffn():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.ops import masked_ffn
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, (256, 512), jnp.float32)
+    win = jax.random.normal(jax.random.fold_in(k, 1), (512, 1024)) * 0.02
+    wout = jax.random.normal(jax.random.fold_in(k, 2), (1024, 512)) * 0.02
+    mask = jnp.asarray(np.random.RandomState(0).randint(0, 2, 8),
+                       jnp.int32)
+    masked_ffn(x, win, wout, mask, act="gelu").block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(3):
+        masked_ffn(x, win, wout, mask, act="gelu").block_until_ready()
+    us = (time.perf_counter() - t0) / 3 * 1e6
+    return us, f"kept_blocks={int(mask.sum())}/8;interpret=True"
+
+
+def bench_kernel_decode_gqa():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.ops import decode_gqa
+    k = jax.random.PRNGKey(0)
+    q = jax.random.normal(k, (4, 16, 128), jnp.float32)
+    kc = jax.random.normal(jax.random.fold_in(k, 1), (4, 2048, 2, 128))
+    vc = jax.random.normal(jax.random.fold_in(k, 2), (4, 2048, 2, 128))
+    ln = jnp.full((4,), 2048, jnp.int32)
+    decode_gqa(q, kc, vc, ln).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(3):
+        decode_gqa(q, kc, vc, ln).block_until_ready()
+    us = (time.perf_counter() - t0) / 3 * 1e6
+    return us, "B4_H16_C2048;interpret=True"
+
+
+def bench_roofline_digest():
+    from benchmarks.roofline_report import fmt_row, load
+    t0 = time.perf_counter()
+    try:
+        rows = load()
+    except Exception:
+        return 0.0, "no dryrun results (run repro.launch.dryrun first)"
+    us = (time.perf_counter() - t0) * 1e6
+    if not rows:
+        return us, "no dryrun results"
+    worst = min(rows, key=lambda d: fmt_row(d)["roofline_frac"])
+    f = fmt_row(worst)
+    return us, (f"combos={len(rows)};worst={f['arch']}/{f['shape']}"
+                f";frac={f['roofline_frac']:.3f}")
+
+
+def bench_kernel_rwkv_chunk():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels.ops import rwkv_chunk_scan
+    k = jax.random.PRNGKey(0)
+    B, S, H, N = 2, 128, 4, 64
+    r = jax.random.normal(k, (B, S, H, N))
+    kk = jax.random.normal(jax.random.fold_in(k, 1), (B, S, H, N))
+    v = jax.random.normal(jax.random.fold_in(k, 2), (B, S, H, N))
+    logw = -jnp.exp(jax.random.normal(jax.random.fold_in(k, 3),
+                                      (B, S, H, N)) - 1.0)
+    u = jnp.zeros((H, N))
+    rwkv_chunk_scan(r, kk, v, logw, u, chunk=64)[0].block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(3):
+        rwkv_chunk_scan(r, kk, v, logw, u, chunk=64)[0].block_until_ready()
+    us = (time.perf_counter() - t0) / 3 * 1e6
+    return us, "B2_S128_H4_N64;interpret=True"
+
+
+BENCHES = [
+    ("table2_accuracy", bench_table2_accuracy),
+    ("fig4a_straggler_time", bench_fig4a_straggler_time),
+    ("fig4b_dynamic_stragglers", bench_fig4b_dynamic),
+    ("fig6_invariant_evolution", bench_fig6_invariant_evolution),
+    ("table3_threshold", bench_table3_threshold),
+    ("fig5_scalability", bench_fig5_scalability),
+    ("kernel_invariant_stats", bench_kernel_invariant_stats),
+    ("kernel_masked_ffn", bench_kernel_masked_ffn),
+    ("kernel_decode_gqa", bench_kernel_decode_gqa),
+    ("kernel_rwkv_chunk", bench_kernel_rwkv_chunk),
+    ("roofline_digest", bench_roofline_digest),
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES:
+        try:
+            us, derived = fn()
+            print(f"{name},{us:.0f},{derived}", flush=True)
+        except Exception as e:  # keep the harness running
+            print(f"{name},-1,ERROR:{type(e).__name__}:{e}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Paper Table 2 (small scale): Random vs Ordered vs Invariant Dropout.
+
+Trains the same federated workload with each dropout policy at a fixed
+sub-model size and prints final test accuracy. Invariant Dropout picks the
+neurons whose updates stay below the calibrated threshold for the majority
+of non-straggler clients — the paper's core claim is that this ordering
+(Invariant >= Ordered >= Random) holds across sizes.
+
+Run:  PYTHONPATH=src python examples/compare_dropout_methods.py [rounds]
+"""
+import sys
+
+from repro.fl.simulation import build_simulation
+
+rounds = int(sys.argv[1]) if len(sys.argv) > 1 else 15
+rate = 0.75
+
+print(f"sub-model size r={rate}, {rounds} rounds, 5 clients, 1 straggler")
+for method in ("random", "ordered", "invariant"):
+    sim = build_simulation("femnist", n_clients=5, straggler_ids=(0,),
+                           method=method, fixed_rate=rate, n_data=1200,
+                           seed=0)
+    hist = sim.server.run(rounds, eval_every=rounds)
+    print(f"  {method:10s} final accuracy = {hist[-1].accuracy:.3f}")

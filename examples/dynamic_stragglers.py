@@ -1,0 +1,29 @@
+"""Paper Fig 4b: FLuID re-adapts when the straggler changes at runtime.
+
+Halfway through training, client 0 (the original straggler) recovers and
+client 3 degrades (emulating a background process on the phone). FLuID's
+per-epoch recalibration detects the change and re-targets the sub-model.
+
+Run:  PYTHONPATH=src python examples/dynamic_stragglers.py
+"""
+from repro.fl.simulation import build_simulation
+
+sim = build_simulation("femnist", n_clients=5, straggler_ids=(0,),
+                       method="invariant", n_data=500, seed=0)
+
+print("phase 1: client 0 is the straggler")
+for _ in range(4):
+    h = sim.server.run_round()
+    print(f"  round {h.round}: stragglers={h.stragglers} rates={h.rates}")
+
+print("\n>>> runtime shift: client 0 recovers, client 3 degrades <<<\n")
+sim.set_speed(0, 10.0)
+sim.set_speed(3, 13.5)
+
+print("phase 2: FLuID recalibrates")
+for _ in range(4):
+    h = sim.server.run_round()
+    print(f"  round {h.round}: stragglers={h.stragglers} rates={h.rates}")
+
+assert sim.server.plan.stragglers == [3], "recalibration failed"
+print("\nFLuID now targets client 3 — dynamic adaptation works (Fig 4b).")

@@ -1,0 +1,17 @@
+"""Batched serving: prefill + greedy decode with arch-appropriate caches.
+
+Works for every assigned architecture (GQA ring cache, MLA latent cache,
+RWKV constant-size state, RG-LRU state + local window):
+
+  PYTHONPATH=src python examples/serve_example.py rwkv6-3b
+"""
+import sys
+
+from repro.configs import get_config
+from repro.launch.serve import serve
+
+arch = sys.argv[1] if len(sys.argv) > 1 else "stablelm-12b"
+cfg = get_config(arch).smoke()
+gen, stats = serve(cfg, batch=2, prompt_len=12, gen_len=12)
+print(f"{arch}: generated {gen.shape} tokens")
+print({k: round(v, 3) for k, v in stats.items()})

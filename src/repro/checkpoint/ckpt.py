@@ -1,0 +1,76 @@
+"""Flat-npz checkpointing of arbitrary pytrees + JSON metadata."""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree, prefix=""):
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten(v, f"{prefix}/{k}" if prefix else k))
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            out.update(_flatten(v, f"{prefix}#{i}"))
+    else:
+        out[prefix] = np.asarray(tree)
+    return out
+
+
+def _unflatten(flat):
+    tree = {}
+    for key, val in flat.items():
+        parts = []
+        for seg in key.split("/"):
+            parts.extend(_resplit(seg))
+        node = tree
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = val
+    return _listify(tree)
+
+
+def _resplit(seg):
+    out = []
+    while "#" in seg:
+        head, _, rest = seg.partition("#")
+        num, _, seg2 = rest.partition("/")
+        if head:
+            out.append(head)
+        out.append(("#", int(num)))
+        seg = seg2
+        if not seg:
+            return out
+    out.append(seg)
+    return out
+
+
+def _listify(node):
+    if isinstance(node, dict):
+        keys = list(node.keys())
+        if keys and all(isinstance(k, tuple) and k[0] == "#" for k in keys):
+            n = max(k[1] for k in keys) + 1
+            return [_listify(node[("#", i)]) for i in range(n)]
+        return {k: _listify(v) for k, v in node.items()}
+    return node
+
+
+def save_checkpoint(path: str, tree, meta: dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(jax.device_get(tree))
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    if meta is not None:
+        with open(path.rsplit(".npz", 1)[0] + ".json", "w") as f:
+            json.dump(meta, f, indent=2, default=str)
+
+
+def load_checkpoint(path: str):
+    if not path.endswith(".npz"):
+        path += ".npz"
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    return _unflatten(flat)

@@ -1,0 +1,67 @@
+"""The four assigned input shapes + ShapeDtypeStruct input specs.
+
+``input_specs(cfg, shape)`` returns the exact kwargs pytree that the
+corresponding step function is lowered with — weak-type-correct, shardable,
+and allocation-free.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str            # train | prefill | decode
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def window_override_for(cfg: ModelConfig, shape: InputShape):
+    """long_500k swaps full attention for the sliding-window variant."""
+    if shape.name != "long_500k":
+        return None
+    has_full_attn = any(k == "attn" for k in cfg.block_pattern) or cfg.is_encdec
+    return cfg.long_context_window if has_full_attn else None
+
+
+def input_specs(cfg: ModelConfig, shape, batch_override=None):
+    if isinstance(shape, str):
+        shape = INPUT_SHAPES[shape]
+    B = batch_override or shape.global_batch
+    S = shape.seq_len
+    i32 = jnp.int32
+    f = jnp.dtype(cfg.dtype)
+
+    if shape.mode == "train":
+        spec = {"tokens": jax.ShapeDtypeStruct((B, S), i32),
+                "targets": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.is_encdec:
+            spec["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), f)
+        return {"batch": spec}
+
+    if shape.mode == "prefill":
+        spec = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if cfg.is_encdec:
+            spec["frames"] = jax.ShapeDtypeStruct((B, S, cfg.d_model), f)
+        return {"batch": spec}
+
+    # decode: ONE new token against a seq_len-deep cache
+    from repro.models import model as model_lib
+    wo = window_override_for(cfg, shape)
+    return {"token": jax.ShapeDtypeStruct((B, 1), i32),
+            "pos": jax.ShapeDtypeStruct((B,), i32),
+            "caches": model_lib.cache_specs(cfg, B, S, window_override=wo)}

@@ -1,0 +1,3 @@
+from repro.core.aggregate import ClientUpdate, aggregate
+from repro.core.dropout import DropoutPolicy
+from repro.core.fluid import FluidConfig, FluidServer

@@ -1,0 +1,47 @@
+"""Masked FedAvg aggregation (paper Algorithm 1, line 16).
+
+Clients return deltas (new - broadcast). Stragglers' deltas arrive embedded
+in full coordinates with a participation mask. The server averages each
+element over the clients that actually trained it, weighted by sample count:
+
+    w_new = w + sum_c(n_c * mask_c * delta_c) / sum_c(n_c * mask_c)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass
+class ClientUpdate:
+    delta: dict                 # full-coordinate delta tree
+    n_samples: int
+    mask: Optional[dict] = None  # None = trained the full model
+    sim_time: float = 0.0
+    real_time: float = 0.0
+    client_id: int = -1
+
+
+def aggregate(global_params, updates: Sequence[ClientUpdate]):
+    """Participation-weighted FedAvg."""
+    num = jax.tree.map(jnp.zeros_like, global_params)
+    den = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                       global_params)
+    for u in updates:
+        w = float(u.n_samples)
+        if u.mask is None:
+            num = jax.tree.map(lambda a, d: a + w * d.astype(a.dtype),
+                               num, u.delta)
+            den = jax.tree.map(lambda a: a + w, den)
+        else:
+            num = jax.tree.map(
+                lambda a, d, m: a + (w * m * d).astype(a.dtype),
+                num, u.delta, u.mask)
+            den = jax.tree.map(lambda a, m: a + w * m, den, u.mask)
+    return jax.tree.map(
+        lambda p, n, d: p + jnp.where(d > 0, n / jnp.maximum(d, 1e-12),
+                                      0.0).astype(p.dtype),
+        global_params, num, den)

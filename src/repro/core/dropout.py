@@ -1,0 +1,102 @@
+"""Sub-model neuron-selection policies: Random / Ordered / Invariant.
+
+Every policy maps (group, dropout rate r) -> kept-neuron index array.
+r in (0, 1] is the *kept* fraction (sub-model size as a fraction of the
+global model, matching the paper's Table 2 convention).
+
+Invariant selection (paper §4/§5): drop the neurons most agreed-invariant by
+the non-straggler majority — ranked by (majority vote count, then lowest
+historical update magnitude) — never dropping more than the target count.
+An EMA of stats across calibration steps implements the paper's
+"consistently fall below the threshold over multiple epochs" preference.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence
+
+import numpy as np
+
+from repro.core import invariant as inv
+
+
+def keep_count(size: int, r: float, minimum: int = 1) -> int:
+    return max(minimum, int(round(size * r)))
+
+
+def random_keep(rng: np.random.RandomState, size: int, r: float) -> np.ndarray:
+    k = keep_count(size, r)
+    return np.sort(rng.choice(size, size=k, replace=False))
+
+
+def ordered_keep(size: int, r: float) -> np.ndarray:
+    """FjORD Ordered Dropout: keep the left-most k neurons."""
+    return np.arange(keep_count(size, r))
+
+
+def invariant_keep(votes: np.ndarray, stats: np.ndarray, r: float
+                   ) -> np.ndarray:
+    """votes: (#clients flagging invariant) per neuron; stats: mean update."""
+    size = votes.shape[0]
+    k = keep_count(size, r)
+    n_drop = size - k
+    # drop order: most votes first, then smallest mean update
+    order = np.lexsort((stats, -votes))
+    dropped = order[:n_drop]
+    keep = np.setdiff1d(np.arange(size), dropped)
+    return np.sort(keep)
+
+
+@dataclass
+class DropoutPolicy:
+    """Stateful selector. method in {random, ordered, invariant}."""
+    method: str
+    unit_specs: Sequence[dict]
+    seed: int = 0
+    ema_decay: float = 0.5
+    _rng: np.random.RandomState = field(init=False, repr=False)
+    _ema_stats: Optional[Dict[str, np.ndarray]] = field(default=None,
+                                                        repr=False)
+    _votes: Optional[Dict[str, np.ndarray]] = field(default=None, repr=False)
+
+    def __post_init__(self):
+        self._rng = np.random.RandomState(self.seed)
+
+    # ------------------------------------------------------------------ state
+    def observe(self, per_client_stats, th: float):
+        """Feed this calibration step's non-straggler stats (invariant only)."""
+        if self.method != "invariant":
+            return
+        votes = inv.invariant_counts(per_client_stats, th)
+        means = inv.mean_stats(per_client_stats)
+        if self._ema_stats is None:
+            self._ema_stats, self._votes = means, {
+                k: v.astype(np.float64) for k, v in votes.items()}
+        else:
+            a = self.ema_decay
+            self._ema_stats = {k: a * self._ema_stats[k] + (1 - a) * means[k]
+                               for k in means}
+            self._votes = {k: a * self._votes[k] + (1 - a) * votes[k]
+                           for k in votes}
+
+    # -------------------------------------------------------------- selection
+    def keep_map(self, r: float) -> Dict[str, np.ndarray]:
+        """Kept indices per group for sub-model size r."""
+        out = {}
+        for g in self.unit_specs:
+            name, size = g["name"], g["size"]
+            if r >= 1.0:
+                out[name] = np.arange(size)
+            elif self.method == "random":
+                out[name] = random_keep(self._rng, size, r)
+            elif self.method == "ordered":
+                out[name] = ordered_keep(size, r)
+            elif self.method == "invariant":
+                if self._votes is None:   # no stats yet: fall back to ordered
+                    out[name] = ordered_keep(size, r)
+                else:
+                    out[name] = invariant_keep(self._votes[name],
+                                               self._ema_stats[name], r)
+            else:
+                raise ValueError(self.method)
+        return out

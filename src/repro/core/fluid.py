@@ -1,0 +1,164 @@
+"""FLuID server — Algorithm 1 of the paper, framework-level.
+
+The server is agnostic to how clients execute (real devices, simulated
+clients, or pod-level client shards): anything satisfying the Client
+protocol works. Per calibration step it (1) profiles end-to-end client
+times, (2) re-detects stragglers and T_target, (3) re-derives per-straggler
+dropout rates r_i from the linear time model, (4) increments the drop
+threshold until enough neurons are invariant, and (5) extracts tailored
+sub-models via the selected policy (random / ordered / invariant).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import invariant as inv
+from repro.core import straggler as strag
+from repro.core import submodel as sub
+from repro.core.aggregate import ClientUpdate, aggregate
+from repro.core.dropout import DropoutPolicy, keep_count
+
+
+@dataclass
+class FluidConfig:
+    method: str = "invariant"              # random | ordered | invariant | none
+    submodel_sizes: Sequence[float] = strag.DEFAULT_SIZES
+    fixed_rate: Optional[float] = None     # force one r for all stragglers
+    straggler_frac: Optional[float] = None  # None => auto gap detection
+    calibrate_every: int = 1
+    warmup_rounds: int = 1                 # full-model rounds before dropout
+    seed: int = 0
+
+
+@dataclass
+class RoundLog:
+    round: int = 0
+    round_time: float = 0.0                # max client sim time (sync FL)
+    straggler_time: float = 0.0
+    t_target: float = 0.0
+    stragglers: List[int] = field(default_factory=list)
+    rates: Dict[int, float] = field(default_factory=dict)
+    threshold: float = 0.0
+    invariant_frac: float = 0.0
+    calib_time: float = 0.0                # server-side overhead (real s)
+    accuracy: float = float("nan")
+
+
+class FluidServer:
+    def __init__(self, params, unit_specs, clients, cfg: FluidConfig,
+                 eval_fn: Optional[Callable] = None):
+        self.params = params
+        self.unit_specs = unit_specs
+        self.clients = list(clients)
+        self.cfg = cfg
+        self.eval_fn = eval_fn
+        self.policy = DropoutPolicy(
+            cfg.method if cfg.method != "none" else "ordered",
+            unit_specs, seed=cfg.seed)
+        self.th: Optional[float] = None
+        self.plan: Optional[strag.StragglerPlan] = None
+        self.round = 0
+        self.history: List[RoundLog] = []
+
+    # ------------------------------------------------------------------ utils
+    def _total_neurons(self) -> int:
+        return sum(g["size"] for g in self.unit_specs)
+
+    def _drop_target(self, rates: Dict[int, float]) -> int:
+        if not rates:
+            return 0
+        r_min = min(rates.values())
+        return sum(g["size"] - keep_count(g["size"], r_min)
+                   for g in self.unit_specs)
+
+    # ------------------------------------------------------------------ round
+    def run_round(self, eval_now: bool = False) -> RoundLog:
+        cfg = self.cfg
+        log = RoundLog(round=self.round)
+        use_dropout = (cfg.method != "none"
+                       and self.round >= cfg.warmup_rounds
+                       and self.plan is not None
+                       and bool(self.plan.stragglers))
+
+        # -------- broadcast + local training
+        updates: List[ClientUpdate] = []
+        keep_maps: Dict[int, dict] = {}
+        rates_used: Dict[int, float] = {}
+        for c in self.clients:
+            if use_dropout and c.id in self.plan.stragglers:
+                r = (cfg.fixed_rate if cfg.fixed_rate is not None
+                     else self.plan.rates[c.id])
+                keep = self.policy.keep_map(r)
+                keep_maps[c.id] = keep
+                rates_used[c.id] = r
+                sub_params = sub.extract(self.params, self.unit_specs, keep)
+                u = c.train(sub_params, keep_map=keep, rate=r)
+                full_delta, mask = sub.embed_delta(
+                    u.delta, self.params, self.unit_specs, keep)
+                u = ClientUpdate(full_delta, u.n_samples, mask,
+                                 u.sim_time, u.real_time, c.id)
+            else:
+                u = c.train(self.params)
+            updates.append(u)
+
+        actual = {u.client_id: u.sim_time for u in updates}
+        # full-model-equivalent latency: a straggler that trained a sub-model
+        # of size r would take time/r on the full model (linear model, A.3)
+        latencies = {u.client_id: u.sim_time / rates_used.get(u.client_id, 1.0)
+                     for u in updates}
+        log.round_time = max(actual.values())
+        if self.plan and self.plan.stragglers:
+            st = [actual[c] for c in self.plan.stragglers if c in actual]
+            log.straggler_time = max(st) if st else 0.0
+            log.t_target = self.plan.t_target
+            log.stragglers = list(self.plan.stragglers)
+            log.rates = dict(self.plan.rates)
+
+        # -------- aggregate
+        prev = self.params
+        self.params = aggregate(self.params, updates)
+
+        # -------- calibration (server-side; wall-clock measured as overhead)
+        t0 = time.perf_counter()
+        if self.round % cfg.calibrate_every == 0:
+            non_straggler_updates = [u for u in updates if u.mask is None]
+            per_client = [
+                inv.neuron_stats(prev,
+                                 jax.tree.map(lambda p, d: p + d,
+                                              prev, u.delta),
+                                 self.unit_specs)
+                for u in non_straggler_updates]
+            if per_client:
+                if self.th is None:
+                    self.th = inv.initial_threshold(per_client)
+                self.plan = strag.plan(latencies, frac=cfg.straggler_frac,
+                                       sizes=cfg.submodel_sizes)
+                target = self._drop_target(
+                    {c: cfg.fixed_rate for c in self.plan.stragglers}
+                    if cfg.fixed_rate is not None else self.plan.rates)
+                if target:
+                    self.th = inv.calibrate_threshold(per_client, target,
+                                                      self.th)
+                self.policy.observe(per_client, self.th)
+                log.threshold = float(self.th)
+                log.invariant_frac = (inv.count_invariant(per_client, self.th)
+                                      / self._total_neurons())
+        log.calib_time = time.perf_counter() - t0
+
+        if eval_now and self.eval_fn is not None:
+            log.accuracy = float(self.eval_fn(self.params))
+        self.history.append(log)
+        self.round += 1
+        return log
+
+    def run(self, rounds: int, eval_every: int = 0):
+        for i in range(rounds):
+            ev = bool(eval_every) and ((i + 1) % eval_every == 0
+                                       or i == rounds - 1)
+            self.run_round(eval_now=ev)
+        return self.history

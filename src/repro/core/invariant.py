@@ -1,0 +1,136 @@
+"""Invariant-neuron statistics and drop-threshold calibration (paper §4, §5).
+
+A neuron's *update statistic* for one client is the maximum relative weight
+change over all weights that produce it:
+
+    g_i = max_w |w(t) - w(t-1)| / (|w(t-1)| + eps)
+
+(the paper's "minimum g such that g >= (w(t)-w(t-1))/w(t-1)" — i.e. the
+tightest bound covering every weight of the neuron).
+
+A neuron is *invariant* at threshold th when g_i <= th for the **majority of
+non-straggler clients** (stragglers train sub-models, so the server never
+uses their updates for this). The initial threshold is the client-average of
+the per-client minimum neuron stat; it is then incremented geometrically
+until at least the target number of neurons is invariant (Algorithm 1,
+lines 9 / 22).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+EPS = 1e-8
+TH_GROWTH = 1.25
+
+
+def _get(tree, path: str):
+    node = tree
+    for part in path.split("/"):
+        node = node[part]
+    return node
+
+
+def neuron_stats_for_group(prev_tree, new_tree, group,
+                           kind: str = "norm") -> jnp.ndarray:
+    """Per-neuron relative update statistic over the group's producers.
+
+    kind="norm" (default): ||Δw|| / (||w(t-1)|| + eps) per neuron — one
+    relative "percent difference g of the neuron" (paper §5). kind="max":
+    per-weight max relative delta (dominated by near-zero weights; kept for
+    ablation). Returns (size,) float32."""
+    size = group["size"]
+    if kind == "max":
+        stats = jnp.zeros((size,), jnp.float32)
+        for path, axis, tile in group["out"]:
+            w0 = _get(prev_tree, path).astype(jnp.float32)
+            w1 = _get(new_tree, path).astype(jnp.float32)
+            rel = jnp.abs(w1 - w0) / (jnp.abs(w0) + EPS)
+            rel = jnp.moveaxis(rel, axis, 0).reshape(tile, size, -1)
+            stats = jnp.maximum(stats, rel.max(axis=(0, 2)))
+        return stats
+    num = jnp.zeros((size,), jnp.float32)
+    den = jnp.zeros((size,), jnp.float32)
+    for path, axis, tile in group["out"]:
+        w0 = _get(prev_tree, path).astype(jnp.float32)
+        w1 = _get(new_tree, path).astype(jnp.float32)
+        d2 = jnp.square(w1 - w0)
+        d2 = jnp.moveaxis(d2, axis, 0).reshape(tile, size, -1)
+        w2 = jnp.moveaxis(jnp.square(w0), axis, 0).reshape(tile, size, -1)
+        num = num + d2.sum(axis=(0, 2))
+        den = den + w2.sum(axis=(0, 2))
+    return jnp.sqrt(num) / (jnp.sqrt(den) + EPS)
+
+
+def neuron_stats(prev_tree, new_tree, unit_specs,
+                 kind: str = "norm") -> Dict[str, jnp.ndarray]:
+    return {g["name"]: neuron_stats_for_group(prev_tree, new_tree, g, kind)
+            for g in unit_specs}
+
+
+def initial_threshold(per_client_stats: Sequence[Dict[str, jnp.ndarray]]):
+    """Average over clients of the min percent-update over all neurons."""
+    mins = []
+    for cs in per_client_stats:
+        allv = jnp.concatenate([v.ravel() for v in cs.values()])
+        mins.append(allv.min())
+    return float(jnp.mean(jnp.stack(mins)))
+
+
+def invariant_counts(per_client_stats: Sequence[Dict[str, jnp.ndarray]],
+                     th: float) -> Dict[str, np.ndarray]:
+    """Per group: #clients for which each neuron is below th."""
+    out = {}
+    for g in per_client_stats[0]:
+        votes = jnp.stack([cs[g] <= th for cs in per_client_stats])
+        out[g] = np.asarray(votes.sum(axis=0))
+    return out
+
+
+def mean_stats(per_client_stats) -> Dict[str, np.ndarray]:
+    return {g: np.asarray(jnp.stack([cs[g] for cs in per_client_stats])
+                          .mean(axis=0))
+            for g in per_client_stats[0]}
+
+
+def invariant_mask(per_client_stats, th: float) -> Dict[str, np.ndarray]:
+    """Neurons invariant for the strict majority of clients."""
+    n = len(per_client_stats)
+    counts = invariant_counts(per_client_stats, th)
+    return {g: c > n / 2 for g, c in counts.items()}
+
+
+def count_invariant(per_client_stats, th: float) -> int:
+    m = invariant_mask(per_client_stats, th)
+    return int(sum(v.sum() for v in m.values()))
+
+
+def calibrate_threshold(per_client_stats, n_drop_target: int, th0: float,
+                        max_iters: int = 200) -> float:
+    """Increment th until #invariant >= n_drop_target (Algorithm 1 l.22)."""
+    th = max(float(th0), EPS)
+    for _ in range(max_iters):
+        if count_invariant(per_client_stats, th) >= n_drop_target:
+            return th
+        th *= TH_GROWTH
+    return th
+
+
+def calibrate_threshold_per_group(per_client_stats, drop_targets: Dict[str, int],
+                                  th0: float, max_iters: int = 200
+                                  ) -> Dict[str, float]:
+    """Per-layer thresholds (paper: 'FLuID can have a different drop
+    threshold for each layer')."""
+    out = {}
+    for g, target in drop_targets.items():
+        th = max(float(th0), EPS)
+        stats_g = [{g: cs[g]} for cs in per_client_stats]
+        for _ in range(max_iters):
+            if count_invariant(stats_g, th) >= target:
+                break
+            th *= TH_GROWTH
+        out[g] = th
+    return out

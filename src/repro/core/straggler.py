@@ -1,0 +1,66 @@
+"""Straggler detection + sub-model sizing from profiled client latencies.
+
+The paper's rule (§5):
+  * T_target = the next-slowest (non-straggler) client's end-to-end time;
+  * Speedup_i = T_straggler_i / T_target;
+  * r_i = the predefined sub-model size closest to 1/Speedup_i (training
+    time is linear in sub-model size — paper App. A.3).
+Recalibration happens every calibration step, so the straggler cohort can
+change at runtime (paper Fig. 4b).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+DEFAULT_SIZES = (0.5, 0.65, 0.75, 0.85, 0.95, 1.0)
+
+
+@dataclass
+class StragglerPlan:
+    stragglers: List[int]
+    t_target: float
+    speedups: Dict[int, float]
+    rates: Dict[int, float]         # r_i per straggler
+
+
+def detect_stragglers(latencies: Dict[int, float],
+                      frac: Optional[float] = None,
+                      gap_factor: float = 1.10) -> List[int]:
+    """If frac given: slowest ceil(frac*C) clients. Else: every client more
+    than gap_factor slower than the next-slowest one below it."""
+    ids = sorted(latencies, key=lambda c: latencies[c], reverse=True)
+    if frac is not None:
+        k = max(1, int(round(frac * len(ids))))
+        return ids[:k]
+    out = []
+    for i, c in enumerate(ids[:-1]):
+        nxt = latencies[ids[i + 1]]
+        if latencies[c] > gap_factor * nxt:
+            out.append(c)
+        else:
+            break
+    return out
+
+
+def pick_rate(speedup: float, sizes: Sequence[float] = DEFAULT_SIZES) -> float:
+    """Predefined size closest to 1/speedup (never the full model)."""
+    want = 1.0 / max(speedup, 1.0)
+    cand = [s for s in sizes if s < 1.0]
+    return min(cand, key=lambda s: abs(s - want))
+
+
+def plan(latencies: Dict[int, float], frac: Optional[float] = None,
+         sizes: Sequence[float] = DEFAULT_SIZES,
+         gap_factor: float = 1.10) -> StragglerPlan:
+    stragglers = detect_stragglers(latencies, frac=frac,
+                                   gap_factor=gap_factor)
+    non = [c for c in latencies if c not in stragglers]
+    if not stragglers or not non:
+        return StragglerPlan([], max(latencies.values(), default=0.0), {}, {})
+    t_target = max(latencies[c] for c in non)   # next-slowest client
+    speedups = {c: latencies[c] / t_target for c in stragglers}
+    rates = {c: pick_rate(s, sizes) for c, s in speedups.items()}
+    return StragglerPlan(stragglers, t_target, speedups, rates)

@@ -1,0 +1,104 @@
+"""Physical sub-model extraction / re-embedding over unit-spec'd param trees.
+
+extract():      gather the kept rows/cols -> a *smaller* param tree the
+                straggler actually trains (less compute AND less transfer,
+                exactly the paper's mechanism).
+embed_delta():  scatter a sub-model delta back into full-model coordinates,
+                plus the 0/1 participation mask used by masked FedAvg.
+
+Tile factors expand kept neuron indices into structured axes
+(conv->FC flatten, LSTM gate blocks) — see models/small.py for the grammar.
+"""
+from __future__ import annotations
+
+import copy
+from typing import Dict, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _get(tree, path):
+    node = tree
+    for p in path.split("/"):
+        node = node[p]
+    return node
+
+
+def _set(tree, path, value):
+    parts = path.split("/")
+    node = tree
+    for p in parts[:-1]:
+        node = node[p]
+    node[parts[-1]] = value
+
+
+def expand_indices(keep: np.ndarray, tile: int, size: int) -> np.ndarray:
+    """{t*size + i : t < tile, i in keep} in axis order."""
+    if tile == 1:
+        return keep
+    return (np.arange(tile)[:, None] * size + keep[None, :]).reshape(-1)
+
+
+def _axis_indices(unit_specs, keep_map) -> Dict[str, Dict[int, np.ndarray]]:
+    """path -> {axis: kept index array}."""
+    out: Dict[str, Dict[int, np.ndarray]] = {}
+    for g in unit_specs:
+        keep = keep_map[g["name"]]
+        for role in ("out", "in"):
+            for path, axis, tile in g[role]:
+                idx = expand_indices(np.asarray(keep), tile, g["size"])
+                out.setdefault(path, {})
+                if axis in out[path]:
+                    # same array referenced twice on one axis: intersect
+                    out[path][axis] = np.intersect1d(out[path][axis], idx)
+                else:
+                    out[path][axis] = idx
+    return out
+
+
+def extract(params, unit_specs, keep_map):
+    """Gather the sub-model. Returns a new tree (shared leaves where untouched)."""
+    sub = copy.deepcopy(jax.tree.map(lambda x: x, params))
+    for path, axes in _axis_indices(unit_specs, keep_map).items():
+        arr = _get(sub, path)
+        for axis, idx in sorted(axes.items()):
+            arr = jnp.take(arr, jnp.asarray(idx), axis=axis)
+        _set(sub, path, arr)
+    return sub
+
+
+def embed_delta(sub_delta, full_like, unit_specs, keep_map):
+    """Scatter sub-model delta into full coordinates.
+
+    Returns (full_delta, mask) — mask has 1.0 exactly where the straggler
+    trained. Arrays untouched by any group (same shape in the sub-model,
+    fully trained by the straggler) pass through verbatim with mask=1."""
+    full_delta = jax.tree.map(
+        lambda s, f: (s.astype(f.dtype) if s.shape == f.shape
+                      else jnp.zeros_like(f)),
+        sub_delta, full_like)
+    mask = jax.tree.map(lambda x: jnp.ones_like(x, dtype=jnp.float32),
+                        full_like)
+    axis_idx = _axis_indices(unit_specs, keep_map)
+    for path, axes in axis_idx.items():
+        target = _get(full_like, path)
+        idxs = [np.arange(n) for n in target.shape]
+        for axis, idx in axes.items():
+            idxs[axis] = np.asarray(idx)
+        grid = jnp.ix_(*[jnp.asarray(i) for i in idxs])
+        zero = jnp.zeros_like(target)
+        _set(full_delta, path, zero.at[grid].set(_get(sub_delta, path)
+                                                 .astype(target.dtype)))
+        m = jnp.zeros(target.shape, jnp.float32)
+        _set(mask, path, m.at[grid].set(1.0))
+    return full_delta, mask
+
+
+def submodel_sizes(params, unit_specs, keep_map):
+    """(#params sub, #params full) — the transfer/compute saving."""
+    sub = extract(params, unit_specs, keep_map)
+    n_sub = sum(x.size for x in jax.tree.leaves(sub))
+    n_full = sum(x.size for x in jax.tree.leaves(params))
+    return n_sub, n_full

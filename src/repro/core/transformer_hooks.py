@@ -1,0 +1,121 @@
+"""FLuID hooks for the big-architecture path (mask-based sub-models).
+
+The FL simulator drops neurons by *physical extraction* (core/submodel.py).
+At datacenter scale the same math is applied through masks so one compiled
+train step serves every sub-model (DESIGN.md §2): per layer, FFN hidden
+units (and MoE expert-units / whole experts) are scored by the same
+norm-relative update statistic and the lowest-stat units are masked.
+
+``block128=True`` rounds the kept set to 128-aligned blocks (MXU-native
+block-invariant dropout — the beyond-paper TPU adaptation) matching
+kernels/masked_ffn.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.dropout import keep_count
+from repro.models import transformer
+
+
+def _ffn_stat(prev_l, new_l):
+    """Per-hidden-unit norm-relative delta for one (stacked) layer tree.
+    Works on (R, d, f) w_in / (R, f, d) w_out stacks; returns (R, f)."""
+    num = 0.0
+    den = 0.0
+    for key, axis in (("w_in", 1), ("w_gate", 1), ("w_out", 2)):
+        if key not in prev_l:
+            continue
+        w0 = prev_l[key].astype(jnp.float32)
+        w1 = new_l[key].astype(jnp.float32)
+        red = axis  # the non-unit trailing axis
+        num = num + jnp.square(w1 - w0).sum(axis=red)
+        den = den + jnp.square(w0).sum(axis=red)
+    return jnp.sqrt(num) / (jnp.sqrt(den) + 1e-8)
+
+
+def ffn_unit_stats(prev_params, new_params, cfg: ModelConfig):
+    """Per-segment list of per-unit {'l<i>': {'ffn': (R, f)}} stats."""
+    segs = transformer.build_segments(cfg)
+    out = []
+    for si, seg in enumerate(segs):
+        seg_prev = prev_params["stack"][f"seg{si}"]
+        seg_new = new_params["stack"][f"seg{si}"]
+        unit = {}
+        for i, (mixer, ffn) in enumerate(seg.unit):
+            lp, ln = seg_prev[f"l{i}"], seg_new[f"l{i}"]
+            entry = {}
+            if ffn == "dense":
+                entry["ffn"] = _ffn_stat(lp["ffn"], ln["ffn"])
+            elif ffn == "cmix":
+                entry["ffn"] = _ffn_stat(lp["cmix"], ln["cmix"])
+            elif ffn == "moe":
+                w0 = lp["moe"]["w_in"].astype(jnp.float32)
+                w1 = ln["moe"]["w_in"].astype(jnp.float32)
+                num = jnp.square(w1 - w0).sum(axis=2)      # (R, E, f)
+                den = jnp.square(w0).sum(axis=2)
+                entry["moe"] = jnp.sqrt(num) / (jnp.sqrt(den) + 1e-8)
+                entry["experts"] = entry["moe"].mean(axis=-1)   # (R, E)
+            unit[f"l{i}"] = entry
+        out.append(unit)
+    return out
+
+
+def _mask_from_stats(stats: np.ndarray, r: float, block128: bool):
+    """Keep the (r * n) highest-stat units along the last axis."""
+    n = stats.shape[-1]
+    k = keep_count(n, r)
+    if block128 and n % 128 == 0:
+        blocks = stats.reshape(*stats.shape[:-1], n // 128, 128).mean(-1)
+        kb = max(1, int(round(n // 128 * r)))
+        thresh = np.sort(blocks, axis=-1)[..., -kb][..., None]
+        bm = (blocks >= thresh).astype(np.float32)
+        return np.repeat(bm, 128, axis=-1)
+    thresh = np.sort(stats, axis=-1)[..., -k][..., None]
+    return (stats >= thresh).astype(np.float32)
+
+
+def build_masks(unit_stats, cfg: ModelConfig, r: float,
+                block128: bool = True, drop_experts: bool = False):
+    """Masks pytree for model.forward_seq(masks=...) from ffn_unit_stats."""
+    out = []
+    for seg_stats in unit_stats:
+        unit = {}
+        for lname, entry in seg_stats.items():
+            m = {}
+            if "ffn" in entry:
+                m["ffn"] = jnp.asarray(
+                    _mask_from_stats(np.asarray(entry["ffn"]), r, block128))
+            if "moe" in entry:
+                m["moe"] = jnp.asarray(
+                    _mask_from_stats(np.asarray(entry["moe"]), r, block128))
+                if drop_experts:
+                    m["experts"] = jnp.asarray(_mask_from_stats(
+                        np.asarray(entry["experts"]), r, False))
+            unit[lname] = m
+        out.append(unit)
+    return out
+
+
+def full_masks(cfg: ModelConfig):
+    """All-ones masks (the r=1.0 sub-model; handy for jit signature parity)."""
+    segs = transformer.build_segments(cfg)
+    out = []
+    for seg in segs:
+        unit = {}
+        for i, (mixer, ffn) in enumerate(seg.unit):
+            m = {}
+            if ffn in ("dense", "cmix"):
+                m["ffn"] = jnp.ones((seg.repeats, cfg.d_ff if ffn == "dense"
+                                     else cfg.d_ff), jnp.float32)
+            elif ffn == "moe":
+                m["moe"] = jnp.ones((seg.repeats, cfg.n_experts, cfg.moe_ff),
+                                    jnp.float32)
+            unit[f"l{i}"] = m
+        out.append(unit)
+    return out

@@ -1,0 +1,2 @@
+from repro.data.synthetic import make_dataset, DATASETS
+from repro.data.partition import partition_non_iid, partition_iid

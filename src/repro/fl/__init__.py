@@ -1,0 +1,2 @@
+from repro.fl.client import SimClient
+from repro.fl.simulation import build_simulation, run_experiment

@@ -1,0 +1,93 @@
+"""Emulated FL clients.
+
+Each client owns a non-IID data shard and a *speed model* calibrated to the
+paper's measurement (App. A.3): end-to-end round time is linear in sub-model
+size r, with multiplicative noise, plus a communication term proportional to
+the transferred parameter count. Local training itself is real JAX SGD — the
+deltas are genuine; only wall-clock is modeled (DESIGN.md §7.1). A client's
+speed can be changed mid-run to emulate runtime variation (paper Fig. 4b).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregate import ClientUpdate
+
+_JIT_CACHE: Dict[str, callable] = {}
+
+
+def _train_fn(model_cls):
+    key = model_cls.__name__
+    if key not in _JIT_CACHE:
+        def loss(params, xb, yb):
+            logits = model_cls.apply(params, xb)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
+            return jnp.mean(lse - gold)
+
+        @jax.jit
+        def run(params, xs, ys, lr):
+            """xs: (nb, bs, ...) — one pass of minibatch SGD."""
+            def step(p, batch):
+                xb, yb = batch
+                g = jax.grad(loss)(p, xb, yb)
+                return jax.tree.map(lambda w, gw: w - lr * gw, p, g), 0
+            params, _ = jax.lax.scan(step, params, (xs, ys))
+            return params
+        _JIT_CACHE[key] = run
+    return _JIT_CACHE[key]
+
+
+@dataclass
+class SimClient:
+    id: int
+    model_cls: type
+    x: np.ndarray
+    y: np.ndarray
+    speed: float                     # seconds per epoch at r = 1.0
+    comm_s_per_mparam: float = 0.05  # transfer seconds per 1e6 params (x2)
+    noise: float = 0.03
+    batch_size: int = 20
+    local_epochs: int = 1
+    lr: float = 0.01
+    seed: int = 0
+    _rng: np.random.RandomState = field(init=False, repr=False)
+
+    def __post_init__(self):
+        self._rng = np.random.RandomState(self.seed + 1000 * self.id)
+
+    @property
+    def n_samples(self) -> int:
+        return len(self.y)
+
+    def train(self, params, keep_map=None, rate: float = 1.0) -> ClientUpdate:
+        import time
+        t0 = time.perf_counter()
+        run = _train_fn(self.model_cls)
+        bs = min(self.batch_size, self.n_samples)
+        nb = self.n_samples // bs
+        new_params = params
+        for _ in range(self.local_epochs):
+            order = self._rng.permutation(self.n_samples)[:nb * bs]
+            xs = jnp.asarray(self.x[order].reshape(nb, bs, *self.x.shape[1:]))
+            ys = jnp.asarray(self.y[order].reshape(nb, bs))
+            new_params = run(new_params, xs, ys, self.lr)
+        delta = jax.tree.map(lambda a, b: a - b, new_params, params)
+        real = time.perf_counter() - t0
+        sim = (self.speed * self.local_epochs * rate
+               * (1.0 + self.noise * self._rng.randn()))
+        n_par = sum(x.size for x in jax.tree.leaves(params))
+        sim += 2 * self.comm_s_per_mparam * n_par / 1e6
+        return ClientUpdate(delta, self.n_samples, None, max(sim, 1e-6),
+                            real, self.id)
+
+    def evaluate(self, params, x=None, y=None):
+        x = self.x if x is None else x
+        y = self.y if y is None else y
+        logits = self.model_cls.apply(params, jnp.asarray(x))
+        return float((jnp.argmax(logits, -1) == jnp.asarray(y)).mean())

@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a long KV cache.
+
+The serving hot spot for decode_32k / long_500k: one query token per
+sequence attends over a C-deep cache. Flash-decoding style online softmax:
+grid (B, C_blocks), fp32 running (max, sum, acc) in VMEM scratch, per-block
+validity from prefix lengths (scalar prefetch, drives no control flow but
+masks padded slots). GQA handled by reshaping H = KV * G inside the block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG = -1e30
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref,
+            *, n_c_blocks, block_c, kv_heads, scale):
+    b = pl.program_id(0)
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # (H, hd)
+    H, hd = q.shape
+    G = H // kv_heads
+    k = k_ref[0].astype(jnp.float32)                    # (bc, KV, hd)
+    v = v_ref[0].astype(jnp.float32)
+
+    qg = q.reshape(kv_heads, G, hd)
+    s = jnp.einsum("kgd,ckd->kgc", qg, k) * scale       # (KV, G, bc)
+    pos = c * block_c + jax.lax.broadcasted_iota(jnp.int32, (1, 1, block_c),
+                                                 2)
+    s = jnp.where(pos < len_ref[b], s, NEG)
+    s = s.reshape(H, block_c)
+
+    m_prev = m_ref[...]                                 # (H, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                              # (H, bc)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    pv = jnp.einsum("kgc,ckd->kgd", p.reshape(kv_heads, G, block_c),
+                    v).reshape(H, hd)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(c == n_c_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...]
+                    / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def decode_gqa(q, k, v, lengths, *, block_c: int = 512,
+               interpret: bool = True):
+    """q: (B,H,hd); k,v: (B,C,KV,hd); lengths: (B,) valid prefix.
+    Returns (B,H,hd) in q.dtype."""
+    B, H, hd = q.shape
+    _, C, KV, _ = k.shape
+    assert H % KV == 0
+    block_c = min(block_c, C)
+    pad_c = (-C) % block_c
+    if pad_c:
+        k = jnp.pad(k, ((0, 0), (0, pad_c), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_c), (0, 0), (0, 0)))
+    CP = k.shape[1]
+    grid = (B, CP // block_c)
+    scale = 1.0 / (hd ** 0.5)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_c_blocks=grid[1], block_c=block_c,
+                          kv_heads=KV, scale=scale),
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, H, hd), lambda b, c, L: (b, 0, 0)),
+                pl.BlockSpec((1, block_c, KV, hd),
+                             lambda b, c, L: (b, c, 0, 0)),
+                pl.BlockSpec((1, block_c, KV, hd),
+                             lambda b, c, L: (b, c, 0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, H, hd), lambda b, c, L: (b, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((H, hd), jnp.float32),
+                            pltpu.VMEM((H, 1), jnp.float32),
+                            pltpu.VMEM((H, 1), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k, v)
+    return out

@@ -1,0 +1,78 @@
+"""Pallas TPU kernel: per-neuron relative-update statistic (FLuID core).
+
+For a weight matrix pair (W0, W1) of shape (d_in, n) where column j holds
+neuron j's fan-in weights, computes
+
+    stat[j] = ||W1[:,j] - W0[:,j]||_2 / (||W0[:,j]||_2 + eps)
+
+— the invariant-dropout statistic of Algorithm 1 (norm form, see
+core/invariant.py). The server runs this over every layer at every
+calibration step, so it is the framework's recurring server-side hot spot.
+
+Tiling: grid (n_blocks, d_blocks) with the reduction dim innermost; partial
+sums accumulate in fp32 VMEM scratch and the final sqrt/div runs on the last
+reduction step. Block shapes are MXU/VPU aligned (128 lanes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+EPS = 1e-8
+
+
+def _kernel(w0_ref, w1_ref, out_ref, num_ref, den_ref, *, n_d_blocks):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        num_ref[...] = jnp.zeros_like(num_ref)
+        den_ref[...] = jnp.zeros_like(den_ref)
+
+    w0 = w0_ref[...].astype(jnp.float32)
+    w1 = w1_ref[...].astype(jnp.float32)
+    d = w1 - w0
+    num_ref[...] += jnp.sum(d * d, axis=0, keepdims=True)
+    den_ref[...] += jnp.sum(w0 * w0, axis=0, keepdims=True)
+
+    @pl.when(j == n_d_blocks - 1)
+    def _finalize():
+        out_ref[...] = (jnp.sqrt(num_ref[...])
+                        / (jnp.sqrt(den_ref[...]) + EPS))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d",
+                                             "interpret"))
+def invariant_stats(w0, w1, *, block_n: int = 128, block_d: int = 256,
+                    interpret: bool = True):
+    """w0, w1: (d_in, n). Returns (n,) float32 per-neuron stat."""
+    d_in, n = w0.shape
+    assert w0.shape == w1.shape
+    block_n = min(block_n, n)
+    block_d = min(block_d, d_in)
+    pad_n = (-n) % block_n
+    pad_d = (-d_in) % block_d
+    if pad_n or pad_d:
+        w0 = jnp.pad(w0, ((0, pad_d), (0, pad_n)))
+        w1 = jnp.pad(w1, ((0, pad_d), (0, pad_n)))
+    dP, nP = w0.shape
+    grid = (nP // block_n, dP // block_d)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_d_blocks=grid[1]),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_d, block_n), lambda i, j: (j, i)),
+            pl.BlockSpec((block_d, block_n), lambda i, j: (j, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, nP), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, block_n), jnp.float32),
+                        pltpu.VMEM((1, block_n), jnp.float32)],
+        interpret=interpret,
+    )(w0, w1)
+    return out[0, :n]

@@ -1,0 +1,107 @@
+"""Pallas TPU kernel: block-masked FFN forward (Invariant-Dropout sub-model).
+
+Computes   y = (act(x @ W_in) [* act(x @ W_gate)]) ⊙ mask) @ W_out
+where the neuron mask has 128-block granularity (DESIGN.md §2: the
+TPU-native adaptation of neuron dropout — dropping aligned blocks keeps
+every surviving matmul tile MXU-shaped). Dropped blocks SKIP both matmuls
+via ``pl.when``, so a straggler running a sub-model of size r does ~r of the
+FFN FLOPs *without re-compiling per mask* — the mask is a runtime input.
+
+Grid: (m_blocks, f_blocks); f (the masked hidden dim) is innermost so the
+fp32 accumulator tile in VMEM is revisited. The block mask is a
+scalar-prefetch operand (SMEM) because it drives control flow.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BLOCK_NEURONS = 128
+
+
+def _kernel(mask_ref, x_ref, win_ref, wgate_ref, wout_ref, y_ref, acc_ref,
+            *, n_f_blocks, act):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(mask_ref[j] > 0)
+    def _block():
+        x = x_ref[...]
+        h = jnp.dot(x, win_ref[...],
+                    preferred_element_type=jnp.float32)
+        if wgate_ref is not None:
+            g = jnp.dot(x, wgate_ref[...],
+                        preferred_element_type=jnp.float32)
+            h = act(g) * h
+        else:
+            h = act(h)
+        acc_ref[...] += jnp.dot(h.astype(x.dtype), wout_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_f_blocks - 1)
+    def _finalize():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+_ACTS = {"relu": lambda h: jnp.maximum(h, 0.0),
+         "relu2": lambda h: jnp.square(jnp.maximum(h, 0.0)),
+         "gelu": jax.nn.gelu,
+         "silu": jax.nn.silu}
+
+
+@functools.partial(jax.jit, static_argnames=("act", "block_m", "interpret"))
+def masked_ffn(x, w_in, w_out, block_mask, w_gate=None, *, act: str = "silu",
+               block_m: int = 128, interpret: bool = True):
+    """x: (M, d); w_in[, w_gate]: (d, F); w_out: (F, d);
+    block_mask: (F // 128,) int32 (1 = keep block, 0 = dropped).
+    Returns y: (M, d) in x.dtype. F must be a multiple of 128."""
+    M, d = x.shape
+    F = w_in.shape[1]
+    assert F % BLOCK_NEURONS == 0 and block_mask.shape == (F // BLOCK_NEURONS,)
+    block_m = min(block_m, M)
+    pad_m = (-M) % block_m
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    MP = x.shape[0]
+    grid = (MP // block_m, F // BLOCK_NEURONS)
+
+    gate_specs = []
+    args = [block_mask.astype(jnp.int32), x, w_in]
+    if w_gate is not None:
+        args.append(w_gate)
+        gate_specs = [pl.BlockSpec((d, BLOCK_NEURONS), lambda i, j, m: (0, j))]
+    args.append(w_out)
+
+    kernel = functools.partial(
+        _kernel, n_f_blocks=grid[1], act=_ACTS[act])
+    if w_gate is None:
+        kernel_fn = lambda m, xr, wi, wo, y, a: kernel(m, xr, wi, None, wo,
+                                                       y, a)
+    else:
+        kernel_fn = kernel
+
+    y = pl.pallas_call(
+        kernel_fn,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, d), lambda i, j, m: (i, 0)),
+                pl.BlockSpec((d, BLOCK_NEURONS), lambda i, j, m: (0, j)),
+                *gate_specs,
+                pl.BlockSpec((BLOCK_NEURONS, d), lambda i, j, m: (j, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_m, d), lambda i, j, m: (i, 0)),
+            scratch_shapes=[pltpu.VMEM((block_m, d), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((MP, d), x.dtype),
+        interpret=interpret,
+    )(*args)
+    return y[:M]

@@ -1,0 +1,51 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True on CPU (this container) and False on real
+TPU — the kernels are written for TPU (pl.pallas_call + BlockSpec VMEM
+tiling) and validated in interpret mode against ref.py oracles.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.kernels.decode_gqa import decode_gqa as _decode_gqa
+from repro.kernels.invariant_stats import invariant_stats as _invariant_stats
+from repro.kernels.masked_ffn import masked_ffn as _masked_ffn
+from repro.kernels.rwkv_chunk import rwkv_chunk_scan as _rwkv_chunk_scan
+
+BLOCK_NEURONS = 128
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def invariant_stats(w0, w1, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _invariant_stats(w0, w1, **kw)
+
+
+def masked_ffn(x, w_in, w_out, block_mask, w_gate=None, act="silu", **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _masked_ffn(x, w_in, w_out, block_mask, w_gate=w_gate, act=act,
+                       **kw)
+
+
+def decode_gqa(q, k, v, lengths, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _decode_gqa(q, k, v, lengths, **kw)
+
+
+def rwkv_chunk_scan(r, k, v, logw, u, **kw):
+    kw.setdefault("interpret", _default_interpret())
+    return _rwkv_chunk_scan(r, k, v, logw, u, **kw)
+
+
+def neuron_mask_to_block_mask(mask: np.ndarray) -> np.ndarray:
+    """Per-neuron 0/1 mask (F,) -> per-128-block mask (F//128,).
+    A block survives if ANY of its neurons survives (conservative)."""
+    F = mask.shape[0]
+    assert F % BLOCK_NEURONS == 0
+    return (mask.reshape(F // BLOCK_NEURONS, BLOCK_NEURONS).max(axis=1) > 0
+            ).astype(np.int32)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+_ACTS = {"relu": lambda h: jnp.maximum(h, 0.0),
+         "relu2": lambda h: jnp.square(jnp.maximum(h, 0.0)),
+         "gelu": jax.nn.gelu,
+         "silu": jax.nn.silu}
+
+
+def invariant_stats_ref(w0, w1):
+    """(d_in, n) -> (n,) fp32: ||dW_col|| / (||W0_col|| + eps)."""
+    w0 = w0.astype(jnp.float32)
+    w1 = w1.astype(jnp.float32)
+    num = jnp.sqrt(jnp.sum(jnp.square(w1 - w0), axis=0))
+    den = jnp.sqrt(jnp.sum(jnp.square(w0), axis=0))
+    return num / (den + EPS)
+
+
+def masked_ffn_ref(x, w_in, w_out, block_mask, w_gate=None, act="silu"):
+    xf = x.astype(jnp.float32)
+    h = xf @ w_in.astype(jnp.float32)
+    if w_gate is not None:
+        g = xf @ w_gate.astype(jnp.float32)
+        h = _ACTS[act](g) * h
+    else:
+        h = _ACTS[act](h)
+    F = w_in.shape[1]
+    mask = jnp.repeat(block_mask.astype(jnp.float32), F // block_mask.shape[0])
+    h = h * mask
+    return (h @ w_out.astype(jnp.float32)).astype(x.dtype)
+
+
+def decode_gqa_ref(q, k, v, lengths):
+    """q: (B,H,hd); k,v: (B,C,KV,hd); lengths: (B,) valid prefix lengths.
+    Returns (B,H,hd)."""
+    B, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qf = q.astype(jnp.float32).reshape(B, KV, G, hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgd,bckd->bkgc", qf, kf) / jnp.sqrt(hd)
+    C = k.shape[1]
+    valid = jnp.arange(C)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckd->bkgd", w, vf)
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
+def rwkv_chunk_scan_ref(r, k, v, logw, u):
+    """Naive per-token RWKV-6 recurrence. r,k,v,logw: (B,S,H,N); u: (H,N).
+    Returns (y (B,S,H,N) fp32, state (B,H,N,N) fp32)."""
+    B, S, H, N = r.shape
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    w = jnp.exp(logw.astype(jnp.float32))
+    uf = u.astype(jnp.float32)
+
+    def step(S0, inp):
+        rt, kt, vt, wt = inp                              # (B,H,N)
+        y = (jnp.einsum("bhn,bhnm->bhm", rt, S0)
+             + jnp.einsum("bhn,bhn->bh", rt,
+                          uf[None] * kt)[..., None] * vt)
+        S1 = wt[..., None] * S0 + kt[..., None] * vt[..., None, :]
+        return S1, y
+    sw = lambda t: t.transpose(1, 0, 2, 3)
+    S0 = jnp.zeros((B, H, N, N), jnp.float32)
+    state, ys = jax.lax.scan(step, S0, (sw(rf), sw(kf), sw(vf), sw(w)))
+    return ys.transpose(1, 0, 2, 3), state

@@ -1,0 +1,481 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) combo.
+
+MUST be started fresh (jax locks the device count at first init):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all
+
+Per combo this produces:
+  * proof of compilation on the production mesh (16x16; and 2x16x16 with
+    --multi-pod), with memory_analysis() bytes-per-device,
+  * roofline terms from cost_analysis() + HLO collective parsing, corrected
+    for scan trip counts via per-segment probe lowerings (XLA counts a
+    while-body once — measured; see EXPERIMENTS.md §Methodology).
+Results are written incrementally to experiments/dryrun/<combo>.json.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, input_specs  # noqa: E402
+from repro.configs.shapes import window_override_for  # noqa: E402
+from repro.launch import roofline as rl  # noqa: E402
+from repro.launch import sharding as shlib  # noqa: E402
+from repro.launch import steps as steps_lib  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import encdec, transformer  # noqa: E402
+from repro.models import model as model_lib  # noqa: E402
+
+
+# ---------------------------------------------------------------------------
+# probe lowerings (per-segment bodies; trip-count roofline correction)
+
+def _strip_stack(tree):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), tree)
+
+
+def _unit_param_specs(cfg, seg):
+    one = jax.eval_shape(
+        lambda k: {f"l{i}": transformer._init_layer(k, s, cfg)
+                   for i, s in enumerate(seg.unit)},
+        jax.random.PRNGKey(0))
+    return one
+
+
+def _probe_seq(cfg, seg, mode, S, B, wo, unroll):
+    """Lower one segment body at full shapes. mode train => fwd+bwd."""
+    positions_const = jnp.arange(S, dtype=jnp.int32)
+
+    def apply_unit(up, x):
+        for i, spec in enumerate(seg.unit):
+            x, _, aux = transformer._apply_layer_seq(
+                spec, up[f"l{i}"], x, cfg, positions_const, None, wo,
+                unroll, False)
+        return x
+
+    if mode == "train":
+        def fn(up, x, ct):
+            y, vjp = jax.vjp(apply_unit, up, x)
+            gp, gx = vjp(ct)
+            return y, gp, gx
+    else:
+        def fn(up, x):
+            return apply_unit(up, x)
+    return fn
+
+
+def _probe_decode(cfg, seg, B, S, wo, mla_absorb=False):
+    def fn(up, uc, x, pos):
+        new_u = {}
+        for i, spec in enumerate(seg.unit):
+            x, nc = transformer._apply_layer_decode(
+                spec, up[f"l{i}"], x, uc[f"l{i}"], cfg, pos, None, wo,
+                mla_absorb)
+            new_u[f"l{i}"] = nc
+        return x, new_u
+    return fn
+
+
+def probe_terms(cfg, mesh, shape, mode, wo, compile_probe, variant=None):
+    """Returns list of (repeats, RooflineTerms_per_repeat)."""
+    variant = variant or {}
+    fsdp = not variant.get("no_fsdp", False)
+    seq_shard = variant.get("cache_seq_shard", False)
+    out = []
+    B, S = shape.global_batch, shape.seq_len
+    x_spec = jax.ShapeDtypeStruct((B, 1 if mode == "decode" else S,
+                                   cfg.d_model), jnp.dtype(cfg.dtype))
+    bsym = steps_lib.batch_spec_sym(mesh, B)
+    x_shard = NamedSharding(mesh, shlib.pspec(bsym, None, None))
+
+    if cfg.is_encdec:
+        segs_info = [("enc", cfg.enc_layers), ("dec", cfg.n_layers)]
+        for name, repeats in segs_info:
+            terms = _probe_encdec(cfg, mesh, shape, mode, wo, name,
+                                  x_spec, x_shard, compile_probe)
+            if terms is not None:
+                out.append((repeats, terms))
+        return out
+
+    segs = transformer.build_segments(cfg)
+    for seg in segs:
+        up_spec = _unit_param_specs(cfg, seg)
+        up_shard = shlib.param_shardings(
+            up_spec, mesh, fsdp=fsdp,
+            kv_shardable=cfg.n_kv_heads % mesh.shape.get("model", 1) == 0)
+        with shlib.mesh_context(mesh):
+            if mode in ("train", "prefill"):
+                # rolled + unrolled probes: correct inner chunk loops too
+                t_un = _compile_terms(
+                    _probe_seq(cfg, seg, mode, S, B, wo, unroll=True),
+                    (up_spec, x_spec) + ((x_spec,) if mode == "train" else ()),
+                    (up_shard, x_shard) + ((x_shard,) if mode == "train" else ()),
+                    compile_probe)
+                out.append((seg.repeats, t_un))
+            else:
+                cs = transformer.stack_cache_specs(cfg, B, S, wo)
+                idx = segs.index(seg)
+                uc_spec = _strip_stack(cs[idx])
+                uc_shard = steps_lib.cache_shardings(
+                    cfg, mesh,
+                    jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+                        (1,) + s.shape, s.dtype), uc_spec),
+                    seq_shard=seq_shard)
+                uc_shard = jax.tree.map(
+                    lambda sh: NamedSharding(mesh, P(*sh.spec[1:])), uc_shard)
+                pos_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
+                pos_shard = NamedSharding(mesh, shlib.pspec(bsym))
+                t = _compile_terms(
+                    _probe_decode(cfg, seg, B, S, wo,
+                                  variant.get("mla_absorb", False)),
+                    (up_spec, uc_spec, x_spec, pos_spec),
+                    (up_shard, uc_shard, x_shard, pos_shard),
+                    compile_probe,
+                    decode_cache="seq" if seq_shard else "auto",
+                    upos=variant.get("uniform_pos", False))
+                out.append((seg.repeats, t))
+    return out
+
+
+def _probe_encdec(cfg, mesh, shape, mode, wo, which, x_spec, x_shard,
+                  compile_probe):
+    B, S = shape.global_batch, shape.seq_len
+    positions_const = jnp.arange(S, dtype=jnp.int32)
+    mem_len = model_lib.ENC_MEM_LEN if mode == "decode" else S
+    mem_spec = jax.ShapeDtypeStruct((B, mem_len, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))
+    layer_init = (encdec._init_enc_layer if which == "enc"
+                  else encdec._init_dec_layer)
+    up_spec = jax.eval_shape(lambda k: layer_init(k, cfg),
+                             jax.random.PRNGKey(0))
+    kv_ok = cfg.n_kv_heads % mesh.shape.get("model", 1) == 0
+    up_shard = shlib.param_shardings(up_spec, mesh, kv_shardable=kv_ok)
+
+    with shlib.mesh_context(mesh):
+        if which == "enc":
+            if mode == "decode":
+                return None    # encoder doesn't run at decode
+            from repro.models.attention import attn_seq
+            from repro.models.layers import apply_ffn, apply_norm
+
+            def apply_unit(p, x):
+                h = apply_norm(p["norm1"], x, cfg)
+                y, _ = attn_seq(p["attn"], h, cfg, positions_const,
+                                causal=False, unroll=True)
+                x = x + y
+                h2 = apply_norm(p["norm2"], x, cfg)
+                return x + apply_ffn(p["ffn"], h2, cfg)
+        else:
+            if mode == "decode":
+                cs = encdec.dec_cache_specs(cfg, B, S, mem_len, wo)
+                uc_spec = _strip_stack(cs)
+                uc_shard = jax.tree.map(
+                    lambda s: NamedSharding(
+                        mesh, shlib.guarded_pspec(
+                            mesh, s.shape,
+                            (steps_lib.batch_spec_sym(mesh, B),)
+                            + (None,) * (len(s.shape) - 1))),
+                    uc_spec)
+                pos_spec = jax.ShapeDtypeStruct((B,), jnp.int32)
+                pos_shard = NamedSharding(
+                    mesh, shlib.pspec(steps_lib.batch_spec_sym(mesh, B)))
+                x1_spec = jax.ShapeDtypeStruct((B, 1, cfg.d_model),
+                                               jnp.dtype(cfg.dtype))
+
+                def fn(p, c, x, pos):
+                    # single decoder layer decode
+                    from repro.models.attention import attn_decode, attn_seq
+                    from repro.models.layers import apply_ffn, apply_norm
+                    h = apply_norm(p["norm1"], x, cfg)
+                    y, cc, slots = attn_decode(
+                        p["attn"], h, cfg,
+                        {k: c["attn"][k] for k in ("k", "v")},
+                        c["attn"]["slots"], pos, window=wo)
+                    x = x + y
+                    hc = apply_norm(p["norm_c"], x, cfg)
+                    mpos = jnp.zeros((c["cross_k"].shape[1],), jnp.int32)
+                    y, _ = attn_seq(p["cross"], hc, cfg, pos[:, None],
+                                    kv_override=(c["cross_k"], c["cross_v"]),
+                                    kv_positions=mpos)
+                    x = x + y
+                    h2 = apply_norm(p["norm2"], x, cfg)
+                    x = x + apply_ffn(p["ffn"], h2, cfg)
+                    return x, cc
+                return _compile_terms(fn, (up_spec, uc_spec, x1_spec, pos_spec),
+                                      (up_shard, uc_shard, x_shard, pos_shard),
+                                      compile_probe)
+
+            def apply_unit(p, x, mem):
+                mem_kv = encdec._cross_kv(p["cross"], mem, cfg)
+                x, _ = encdec._dec_layer_seq(p, x, mem_kv, cfg,
+                                             positions_const, None, wo,
+                                             True, False)
+                return x
+
+        if which == "dec" and mode != "decode":
+            mem_shard = x_shard
+            if mode == "train":
+                def fn(p, x, mem, ct):
+                    y, vjp = jax.vjp(lambda pp, xx, mm: apply_unit(pp, xx, mm),
+                                     p, x, mem)
+                    return (y,) + vjp(ct)
+                return _compile_terms(fn, (up_spec, x_spec, mem_spec, x_spec),
+                                      (up_shard, x_shard, mem_shard, x_shard),
+                                      compile_probe)
+            return _compile_terms(lambda p, x, mem: apply_unit(p, x, mem),
+                                  (up_spec, x_spec, mem_spec),
+                                  (up_shard, x_shard, mem_shard),
+                                  compile_probe)
+        # encoder
+        if mode == "train":
+            def fn(p, x, ct):
+                y, vjp = jax.vjp(apply_unit, p, x)
+                return (y,) + vjp(ct)
+            return _compile_terms(fn, (up_spec, x_spec, x_spec),
+                                  (up_shard, x_shard, x_shard), compile_probe)
+        return _compile_terms(apply_unit, (up_spec, x_spec),
+                              (up_shard, x_shard), compile_probe)
+
+
+def _compile_terms(fn, arg_specs, arg_shards, compile_probe=True,
+                   decode_cache="auto", upos=False):
+    with shlib.decode_cache_context(decode_cache), \
+            shlib.uniform_pos_context(upos):
+        lowered = jax.jit(fn, in_shardings=arg_shards).lower(*arg_specs)
+    compiled = lowered.compile()
+    return rl.terms_from_compiled(compiled)
+
+
+# ---------------------------------------------------------------------------
+# full-step lowering
+
+def lower_full(cfg, mesh, shape, wo, variant=None):
+    variant = variant or {}
+    specs = input_specs(cfg, shape)
+    fsdp = not variant.get("no_fsdp", False)
+    with shlib.mesh_context(mesh):
+        if shape.mode == "train":
+            mask_rate = variant.get("fluid_mask")
+            fn = steps_lib.make_train_step(cfg,
+                                           with_masks=mask_rate is not None)
+            in_sh, out_sh, args = steps_lib.shardings_for(
+                cfg, mesh, "train", specs, fsdp=fsdp)
+            if mask_rate is not None:
+                msp, msh = steps_lib.mask_specs_and_shardings(cfg, mesh)
+                args = args + (msp,)
+                in_sh = in_sh + (msh,)
+            jfn = jax.jit(fn, in_shardings=in_sh,
+                          out_shardings=(in_sh[0], in_sh[1], None),
+                          donate_argnums=(0, 1))
+        elif shape.mode == "prefill":
+            fn = steps_lib.make_prefill_step(cfg, window_override=wo)
+            in_sh, _, args = steps_lib.shardings_for(
+                cfg, mesh, "prefill", specs, fsdp=fsdp)
+            jfn = jax.jit(fn, in_shardings=in_sh)
+        else:
+            fn = steps_lib.make_serve_step(
+                cfg, window_override=wo,
+                mla_absorb=variant.get("mla_absorb", False))
+            in_sh, _, args = steps_lib.shardings_for(
+                cfg, mesh, "decode", specs, window_override=wo, fsdp=fsdp,
+                cache_seq_shard=variant.get("cache_seq_shard", False))
+            jfn = jax.jit(fn, in_shardings=in_sh)
+        dc = ("seq" if variant.get("cache_seq_shard") else "auto")
+        t0 = time.time()
+        with shlib.decode_cache_context(dc), \
+                shlib.uniform_pos_context(variant.get("uniform_pos", False)):
+            lowered = jfn.lower(*args)
+        compiled = lowered.compile()
+        dt = time.time() - t0
+    return lowered, compiled, dt
+
+
+# §Perf hillclimb variants (EXPERIMENTS.md §Perf): each entry transforms the
+# lowering — config overrides, sharding strategy, or step semantics.
+VARIANTS = {
+    "base": {},
+    # serve: drop ZeRO-style param sharding (no per-step weight gathers) and
+    # hold serving weights in bf16
+    "serve_tp_bf16": {"no_fsdp": True,
+                      "cfg_overrides": {"param_dtype": "bfloat16"}},
+    # + sequence-sharded KV cache (cross-device flash-decoding)
+    "serve_seqcache": {"no_fsdp": True, "cache_seq_shard": True,
+                       "cfg_overrides": {"param_dtype": "bfloat16"}},
+    # + synchronized-batch single-slot cache write
+    "serve_upos": {"no_fsdp": True, "cache_seq_shard": True,
+                   "uniform_pos": True,
+                   "cfg_overrides": {"param_dtype": "bfloat16"}},
+    # MLA absorbed decode (DeepSeek/MiniCPM): attend in latent space
+    "mla_absorb": {"mla_absorb": True, "no_fsdp": True, "cache_seq_shard": True,
+                   "cfg_overrides": {"param_dtype": "bfloat16"}},
+    # RWKV chunk-size sweep: decay-tensor traffic scales with chunk length
+    "rwkv_chunk32": {"cfg_overrides": {"rwkv_chunk": 32}},
+    "rwkv_chunk16": {"cfg_overrides": {"rwkv_chunk": 16}},
+    "rwkv_chunk128": {"cfg_overrides": {"rwkv_chunk": 128}},
+    "rwkv_c128_bf16": {"cfg_overrides": {"rwkv_chunk": 128,
+                                         "rwkv_chunk_dtype": "bfloat16"}},
+    # FLuID straggler sub-models: masked (one compile, any mask) vs the
+    # physically extracted r=0.75 sub-model (compute actually shrinks)
+    "fluid_mask_r75": {"fluid_mask": 0.75},
+    "submodel_r75": {"dff_scale": 0.75},
+    "submodel_r50": {"dff_scale": 0.5},
+    # microbatching depth
+    "accum4": {"cfg_overrides": {"grad_accum": 4}},
+}
+
+
+def run_combo(arch, shape_name, multi_pod, probes=True, variant_name="base"):
+    variant = VARIANTS[variant_name]
+    cfg = get_config(arch)
+    if variant.get("cfg_overrides"):
+        cfg = cfg.with_overrides(**variant["cfg_overrides"])
+    if variant.get("dff_scale"):
+        sc = variant["dff_scale"]
+        over = {"d_ff": int(cfg.d_ff * sc) // 128 * 128}
+        if cfg.n_experts:
+            over["moe_d_ff"] = int(cfg.moe_ff * sc) // 64 * 64
+        cfg = cfg.with_overrides(**over)
+    shape = INPUT_SHAPES[shape_name]
+    wo = window_override_for(cfg, shape)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = 1
+    for s in mesh.shape.values():
+        n_chips *= s
+
+    lowered, compiled, dt = lower_full(cfg, mesh, shape, wo, variant)
+    ma = compiled.memory_analysis()
+    base = rl.terms_from_compiled(compiled)
+
+    result = {
+        "arch": arch, "shape": shape_name, "variant": variant_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "mode": shape.mode, "window_override": wo,
+        "compile_s": round(dt, 2),
+        "memory": {
+            "argument_bytes_per_device": ma.argument_size_in_bytes,
+            "output_bytes_per_device": ma.output_size_in_bytes,
+            "temp_bytes_per_device": ma.temp_size_in_bytes,
+            "alias_bytes_per_device": ma.alias_size_in_bytes,
+            "peak_estimate_per_device": (ma.argument_size_in_bytes
+                                         + ma.temp_size_in_bytes
+                                         + ma.output_size_in_bytes
+                                         - ma.alias_size_in_bytes),
+        },
+        "uncorrected": base.to_dict(),
+    }
+
+    if probes and not multi_pod:
+        per_seg = probe_terms(cfg, mesh, shape, shape.mode, wo,
+                              compile_probe=True, variant=variant)
+        corrected = base
+        for repeats, terms in per_seg:
+            # full module contains each body once (rolled); probes are
+            # unrolled: corrected = full - rolled_once + repeats*unrolled.
+            # We approximate rolled_once by terms/inner_unroll when the probe
+            # was unrolled; in practice body-once ≈ terms for decode and the
+            # dominant correction is the (repeats-1)x term, so we use:
+            corrected = corrected + terms.scaled(max(repeats - 1, 0))
+        result["roofline"] = corrected.to_dict()
+        result["probe_segments"] = [
+            {"repeats": r, **t.to_dict()} for r, t in per_seg]
+
+        n_active = active_params(cfg)
+        mf = rl.model_flops(cfg, shape, n_active)
+        result["model_flops_global"] = mf
+        result["model_flops_per_device"] = mf / n_chips
+        hw = corrected.flops
+        result["useful_flops_ratio"] = (mf / n_chips) / hw if hw else 0.0
+    return result
+
+
+def active_params(cfg) -> int:
+    """Active parameter count (MoE: top-k + shared experts only)."""
+    sp = model_lib.param_specs(cfg)
+    total = sum(x.size for x in jax.tree.leaves(sp))
+    if cfg.n_experts:
+        def moe_size(tree):
+            n = 0
+            for k, v in tree.items():
+                if k == "moe":
+                    for kk in ("w_in", "w_gate", "w_out"):
+                        if kk in v:
+                            n += v[kk].size
+                elif isinstance(v, dict):
+                    n += moe_size(v)
+            return n
+        routed = moe_size(sp)
+        total = total - routed + routed * cfg.top_k // cfg.n_experts
+    return total
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="also compile the 2x16x16 mesh")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--variant", default="base")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if args.arch == "all" else args.arch.split(",")
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else args.shape.split(",")
+    os.makedirs(args.out, exist_ok=True)
+
+    meshes = []
+    if not args.multi_pod_only:
+        meshes.append(False)
+    if args.multi_pod or args.multi_pod_only:
+        meshes.append(True)
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape_name}__{'mp' if mp else 'sp'}"
+                if args.variant != "base":
+                    tag += f"__{args.variant}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip] {tag}")
+                    continue
+                t0 = time.time()
+                try:
+                    res = run_combo(arch, shape_name, mp,
+                                    probes=not args.no_probes,
+                                    variant_name=args.variant)
+                    with open(path, "w") as f:
+                        json.dump(res, f, indent=2)
+                    rt = res.get("roofline", res["uncorrected"])
+                    print(f"[ok]   {tag} compile={res['compile_s']}s "
+                          f"bottleneck={rt['bottleneck']} "
+                          f"mem/dev={res['memory']['peak_estimate_per_device']/2**30:.2f}GiB "
+                          f"wall={time.time()-t0:.0f}s", flush=True)
+                except Exception as e:
+                    failures.append((tag, repr(e)))
+                    with open(os.path.join(args.out, tag + ".FAIL"), "w") as f:
+                        f.write(traceback.format_exc())
+                    print(f"[FAIL] {tag}: {e}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} failures:")
+        for t, e in failures:
+            print(" ", t, e[:200])
+    else:
+        print("\nall combos lowered + compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Three-term roofline model from compiled dry-run artifacts.
+
+  compute    = HLO_FLOPs(per device)          / peak_FLOPs_per_chip
+  memory     = HLO_bytes_accessed(per device) / HBM_bandwidth
+  collective = wire_bytes(per device)         / ICI_link_bandwidth
+
+HLO FLOPs/bytes come from ``compiled.cost_analysis()`` (measured to be
+per-device on SPMD modules). Collective wire bytes are parsed from the
+compiled HLO text: every all-reduce / all-gather / reduce-scatter /
+all-to-all / collective-permute op contributes ring-algorithm wire bytes
+computed from its (local, post-partition) result shape and replica-group
+size. XLA counts a while-loop body once, so the dry-run corrects totals with
+per-segment probe lowerings x trip counts (see dryrun.py).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict
+
+# TPU v5e constants (per chip) — from the assignment brief.
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\][^ ]*))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+def _wire_factor(op: str, g: int) -> float:
+    if g <= 1:
+        return 0.0
+    if op == "all-reduce":
+        return 2.0 * (g - 1) / g
+    if op == "all-gather":
+        return (g - 1) / g          # x result bytes (already gathered size)
+    if op == "reduce-scatter":
+        return float(g - 1)         # x result bytes (shard) = (g-1)/g x input
+    if op == "all-to-all":
+        return (g - 1) / g
+    if op == "collective-permute":
+        return 1.0
+    return 1.0
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device wire bytes by collective op type."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        b = _shape_bytes(shape_str) * _wire_factor(op, _group_size(line))
+        out[op] = out.get(op, 0.0) + b
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    flops: float = 0.0              # per device
+    bytes_accessed: float = 0.0     # per device
+    wire_bytes: float = 0.0         # per device
+    coll_by_type: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_accessed / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes / ICI_BW
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def step_time(self) -> float:
+        """No-overlap upper bound estimate."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    def scaled(self, k: float) -> "RooflineTerms":
+        return RooflineTerms(self.flops * k, self.bytes_accessed * k,
+                             self.wire_bytes * k,
+                             {o: b * k for o, b in self.coll_by_type.items()})
+
+    def __add__(self, other: "RooflineTerms") -> "RooflineTerms":
+        cbt = dict(self.coll_by_type)
+        for o, b in other.coll_by_type.items():
+            cbt[o] = cbt.get(o, 0.0) + b
+        return RooflineTerms(self.flops + other.flops,
+                             self.bytes_accessed + other.bytes_accessed,
+                             self.wire_bytes + other.wire_bytes, cbt)
+
+    def to_dict(self) -> dict:
+        return {"flops": self.flops, "bytes": self.bytes_accessed,
+                "wire_bytes": self.wire_bytes,
+                "t_compute": self.t_compute, "t_memory": self.t_memory,
+                "t_collective": self.t_collective,
+                "bottleneck": self.bottleneck,
+                "coll_by_type": self.coll_by_type}
+
+
+def terms_from_compiled(compiled) -> RooflineTerms:
+    ca = compiled.cost_analysis() or {}
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    colls = collective_bytes(compiled.as_text())
+    return RooflineTerms(flops, byts, sum(colls.values()), colls)
+
+
+def model_flops(cfg, shape, n_params_active: int) -> float:
+    """6·N·D (training) / 2·N·D (inference) useful-FLOPs reference, global."""
+    tokens = shape.global_batch * (shape.seq_len if shape.mode != "decode"
+                                   else 1)
+    mult = 6.0 if shape.mode == "train" else 2.0
+    return mult * n_params_active * tokens

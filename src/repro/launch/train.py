@@ -1,0 +1,135 @@
+"""Training driver.
+
+Two modes:
+  * plain distributed training of any assigned arch on synthetic LM data
+    (``--arch stablelm-12b --steps 50``), mesh-aware when >1 device;
+  * **FLuID pod-level training** (``--fluid``): client shards = data-axis
+    groups; one shard is an emulated straggler that trains the masked
+    sub-model built from invariant FFN-unit stats (Algorithm 1 transplanted
+    to the datacenter — see DESIGN.md §2).
+
+CPU-friendly: with a single device it runs the smoke config unsharded.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import save_checkpoint
+from repro.configs import get_config
+from repro.core import transformer_hooks as hooks
+from repro.core.straggler import pick_rate
+from repro.launch import sharding as shlib
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import make_train_step
+from repro.models import model as model_lib
+from repro.optim import make_optimizer
+
+
+def synth_batch(rng, cfg, batch, seq):
+    """Synthetic LM data with learnable bigram structure."""
+    v = min(cfg.vocab_size, 512)
+    base = rng.randint(0, v, size=(batch, seq), dtype=np.int32)
+    tokens = np.cumsum(base, axis=1) % v       # locally predictable drift
+    out = {"tokens": jnp.asarray(tokens[:, :-1]),
+           "targets": jnp.asarray(tokens[:, 1:])}
+    if cfg.is_encdec:
+        out["frames"] = jnp.asarray(
+            rng.randn(batch, seq - 1, cfg.d_model).astype(np.float32) * 0.1
+        ).astype(cfg.dtype)
+    return out
+
+
+def run_plain(cfg, steps, batch, seq, log_every=10, ckpt=None):
+    key = jax.random.PRNGKey(0)
+    params = model_lib.init_params(cfg, key)
+    opt = make_optimizer(cfg.optimizer)
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg))
+    rng = np.random.RandomState(0)
+    losses = []
+    for i in range(steps):
+        b = synth_batch(rng, cfg, batch, seq + 1)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, b)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        if i % log_every == 0 or i == steps - 1:
+            print(f"step {i:4d} loss {loss:.4f} "
+                  f"({time.perf_counter() - t0:.2f}s)", flush=True)
+    if ckpt:
+        save_checkpoint(ckpt, {"params": params},
+                        meta={"steps": steps, "final_loss": losses[-1]})
+    return params, losses
+
+
+def run_fluid(cfg, steps, batch, seq, rate=None, calibrate_every=5,
+              straggler_slowdown=1.3, log_every=5):
+    """Pod-level FLuID: one client shard is slow; every calibration step the
+    server re-derives its sub-model from invariant unit statistics."""
+    key = jax.random.PRNGKey(0)
+    params = model_lib.init_params(cfg, key)
+    opt = make_optimizer(cfg.optimizer)
+    opt_state = opt.init(params)
+    full_step = jax.jit(make_train_step(cfg))
+    masked_step = jax.jit(make_train_step(cfg, with_masks=True))
+    rng = np.random.RandomState(0)
+
+    r = rate or pick_rate(straggler_slowdown)
+    masks = None
+    prev_params = params
+    log = []
+    for i in range(steps):
+        b = synth_batch(rng, cfg, batch, seq + 1)
+        if masks is None:
+            params, opt_state, metrics = full_step(params, opt_state, b)
+        else:
+            params, opt_state, metrics = masked_step(params, opt_state, b,
+                                                     masks)
+        if (i + 1) % calibrate_every == 0:
+            stats = hooks.ffn_unit_stats(prev_params, params, cfg)
+            masks = hooks.build_masks(stats, cfg, r)
+            prev_params = params
+        loss = float(metrics["loss"])
+        t_full = 1.0 * straggler_slowdown          # modeled step time units
+        t_fluid = 1.0 * straggler_slowdown * (r if masks is not None else 1)
+        log.append((loss, t_full, t_fluid))
+        if i % log_every == 0 or i == steps - 1:
+            print(f"step {i:4d} loss {loss:.4f} sub-model r={r} "
+                  f"{'masked' if masks is not None else 'full'}", flush=True)
+    return params, log
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-12b")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--full-config", action="store_true",
+                    help="use the full (non-smoke) config")
+    ap.add_argument("--fluid", action="store_true")
+    ap.add_argument("--rate", type=float, default=None)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full_config:
+        cfg = cfg.smoke().with_overrides(grad_accum=1)
+    n_dev = len(jax.devices())
+    mesh = make_host_mesh(min(n_dev, 4), 1) if n_dev > 1 else None
+
+    ctx = shlib.mesh_context(mesh) if mesh else shlib.mesh_context(None)
+    with ctx:
+        if args.fluid:
+            run_fluid(cfg, args.steps, args.batch, args.seq, rate=args.rate)
+        else:
+            run_plain(cfg, args.steps, args.batch, args.seq, ckpt=args.ckpt)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,209 @@
+"""GQA/MQA attention with sliding-window support and ring-buffer KV cache.
+
+Three entry points per layer:
+  attn_seq(...)     -- full-sequence (train / prefill), query-chunked so the
+                       score matrix never exceeds CHUNK x S per head
+  attn_decode(...)  -- one new token against a (possibly windowed) ring cache
+Cache layout per layer: k,v (B, C, KV, hd); slot positions are carried once
+for the whole stack as (B, C) int32 (-1 = empty).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import decode_cache_mode, shard, uniform_pos
+from repro.models.layers import apply_rope, cdtype, dense_init, pdtype
+
+Q_CHUNK = 1024
+NEG = -1e30
+
+
+def init_attention(key, cfg: ModelConfig):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], d, d, H, hd, dtype=pdtype(cfg)),
+         "wk": dense_init(ks[1], d, d, KV, hd, dtype=pdtype(cfg)),
+         "wv": dense_init(ks[2], d, d, KV, hd, dtype=pdtype(cfg)),
+         "wo": dense_init(ks[3], H * hd, H, hd, d, dtype=pdtype(cfg))}
+    if cfg.use_bias:
+        p["bq"] = jnp.zeros((H, hd), pdtype(cfg))
+        p["bk"] = jnp.zeros((KV, hd), pdtype(cfg))
+        p["bv"] = jnp.zeros((KV, hd), pdtype(cfg))
+        p["bo"] = jnp.zeros((d,), pdtype(cfg))
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig, positions, constrain_heads=True):
+    dt = cdtype(cfg)
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(dt))
+    if "bq" in p:
+        q, k, v = q + p["bq"].astype(dt), k + p["bk"].astype(dt), v + p["bv"].astype(dt)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    if constrain_heads:
+        q = shard(q, "B", None, "M", None)
+    return q, k, v
+
+
+def _expand_kv(k, n_heads):
+    """(B,T,KV,hd) -> (B,T,H,hd) by group repeat."""
+    KV = k.shape[2]
+    if KV == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // KV, axis=2)
+
+
+def _sdpa(q, k, v, q_pos, kv_pos, window, scale, causal=True):
+    """q:(B,Sq,H,hd) k,v:(B,T,H,hd); positional causal+window mask.
+
+    kv_pos: (T,) or (B,T) absolute positions, -1 = invalid slot.
+    """
+    scores = jnp.einsum("bqhk,bthk->bhqt", q, k).astype(jnp.float32) * scale
+    if kv_pos.ndim == 1:
+        kv_b = kv_pos[None, None, None, :]
+    else:
+        kv_b = kv_pos[:, None, None, :]
+    q_b = q_pos[None, None, :, None] if q_pos.ndim == 1 else q_pos[:, None, :, None]
+    mask = (kv_b >= 0)
+    if causal:
+        mask &= (kv_b <= q_b)
+    if window is not None:
+        mask &= (q_b - kv_b) < window
+    scores = jnp.where(mask, scores, NEG)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqt,bthk->bqhk", w.astype(v.dtype), v)
+    return out
+
+
+def attn_seq(p, x, cfg: ModelConfig, positions, window=None, unroll=False,
+             kv_override=None, kv_positions=None, causal=True):
+    """Full-sequence attention. Returns (out, (k, v)) for cache capture.
+
+    kv_override: (k, v) for cross-attention (no rope re-application here).
+    """
+    B, S, _ = x.shape
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    if kv_override is None:
+        q, k, v = _qkv(p, x, cfg, positions)
+        kv_pos = positions
+    else:
+        dt = cdtype(cfg)
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+        if "bq" in p:
+            q = q + p["bq"].astype(dt)
+        q = shard(q, "B", None, "M", None)
+        k, v = kv_override
+        kv_pos = kv_positions
+    kf = shard(_expand_kv(k, cfg.n_heads), "B", None, "M", None)
+    vf = shard(_expand_kv(v, cfg.n_heads), "B", None, "M", None)
+
+    if S <= Q_CHUNK:
+        out = _sdpa(q, kf, vf, positions, kv_pos, window, scale, causal)
+    else:
+        assert S % Q_CHUNK == 0, (S, Q_CHUNK)
+        n = S // Q_CHUNK
+        qc = q.reshape(B, n, Q_CHUNK, *q.shape[2:]).transpose(1, 0, 2, 3, 4)
+        pc = positions.reshape(n, Q_CHUNK) if positions.ndim == 1 else None
+
+        def body(_, qp):
+            qi, pi = qp
+            return (), _sdpa(qi, kf, vf, pi, kv_pos, window, scale, causal)
+        if not unroll:
+            body = jax.checkpoint(body)
+        _, oc = jax.lax.scan(body, (), (qc, pc), unroll=(n if unroll else 1))
+        out = oc.transpose(1, 0, 2, 3, 4).reshape(B, S, *oc.shape[3:])
+
+    dt = cdtype(cfg)
+    y = jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(dt))
+    if "bo" in p:
+        y = y + p["bo"].astype(dt)
+    return shard(y, "B", None, None), (k, v)
+
+
+def _sdpa_grouped(q, k, v, q_pos, kv_pos, window, scale, causal=True):
+    """GQA attention without expanding KV to H heads.
+    q: (B,Sq,H,hd); k,v: (B,T,KV,hd)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k).astype(jnp.float32) * scale
+    kv_b = (kv_pos[:, None, None, None, :] if kv_pos.ndim == 2
+            else kv_pos[None, None, None, None, :])
+    q_b = (q_pos[:, None, None, :, None] if q_pos.ndim == 2
+           else q_pos[None, None, None, :, None])
+    mask = (kv_b >= 0)
+    if causal:
+        mask &= (kv_b <= q_b)
+    if window is not None:
+        mask &= (q_b - kv_b) < window
+    s = jnp.where(mask, s, NEG)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqt,btkd->bqkgd", w.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def attn_decode(p, x, cfg: ModelConfig, cache, slot_pos, pos, window=None):
+    """One-token decode. x:(B,1,d); cache: {'k','v'} (B,C,KV,hd);
+    slot_pos: (B,C) int32; pos: (B,) int32. Returns (y, new_cache, new_slot_pos).
+    """
+    dt = cdtype(cfg)
+    B = x.shape[0]
+    C = cache["k"].shape[1]
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+    # decode: leave q unconstrained so GSPMD follows the CACHE's sharding
+    # (sequence-sharded cache => partial scores + stat psums, no gathers)
+    q, k_new, v_new = _qkv(p, x, cfg, pos[:, None], constrain_heads=False)
+
+    idx = (pos % C).astype(jnp.int32)                       # (B,)
+    if uniform_pos():
+        # synchronized batch: one slot write, no full-cache rewrite
+        i0 = idx[0]
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, i0, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, i0, 1)
+        new_slots = jax.lax.dynamic_update_slice_in_dim(
+            slot_pos, pos[:, None], i0, 1)
+    else:
+        # boolean select keeps the cache dtype (arithmetic blends get
+        # upcast to f32 by XLA -> 4x the cache rewrite traffic)
+        upd = (jnp.arange(C, dtype=jnp.int32)[None, :] == idx[:, None])
+        ck = jnp.where(upd[:, :, None, None], k_new, cache["k"])
+        cv = jnp.where(upd[:, :, None, None], v_new, cache["v"])
+        new_slots = jnp.where(upd, pos[:, None], slot_pos)
+
+    if decode_cache_mode() == "seq":
+        # pin the cache sequence axis to the model axis: scores stay local
+        # per C-shard, softmax stats + out psum are the only collectives.
+        # Grouped GQA einsum (no KV->H expansion): the cache is the largest
+        # tensor in decode — never materialize a repeated copy of it.
+        ck = shard(ck, "B", "M", None, None)
+        cv = shard(cv, "B", "M", None, None)
+        out = _sdpa_grouped(q, ck, cv, pos[:, None], new_slots, window,
+                            scale)
+        out = shard(out, "B", None, None, None)
+    else:
+        kf = _expand_kv(ck, cfg.n_heads)
+        vf = _expand_kv(cv, cfg.n_heads)
+        out = _sdpa(q, kf, vf, pos[:, None], new_slots, window, scale)
+    y = jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(dt))
+    if "bo" in p:
+        y = y + p["bo"].astype(dt)
+    return shard(y, "B", None, None), {"k": ck, "v": cv}, new_slots
+
+
+def cache_spec(cfg: ModelConfig, batch: int, cache_len: int):
+    kvd = jnp.dtype(cfg.dtype)
+    return {"k": jax.ShapeDtypeStruct((batch, cache_len, cfg.n_kv_heads,
+                                       cfg.head_dim), kvd),
+            "v": jax.ShapeDtypeStruct((batch, cache_len, cfg.n_kv_heads,
+                                       cfg.head_dim), kvd)}
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        cache_spec(cfg, batch, cache_len))

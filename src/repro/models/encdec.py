@@ -1,0 +1,164 @@
+"""Encoder–decoder stack (SeamlessM4T text/speech backbone).
+
+Encoder: bidirectional attention layers over frontend frame embeddings (the
+audio conv/mel frontend is a stub — inputs arrive as (B, S_enc, d) already).
+Decoder: causal self-attention + cross-attention over encoder memory + FFN.
+Both stacks are scanned (one segment each — uniform layers).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import shard
+from repro.models import attention
+from repro.models.layers import (apply_ffn, apply_norm, cdtype, init_ffn,
+                                 init_norm)
+
+
+def _init_enc_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 2)
+    return {"norm1": init_norm(cfg),
+            "attn": attention.init_attention(ks[0], cfg),
+            "norm2": init_norm(cfg),
+            "ffn": init_ffn(ks[1], cfg)}
+
+
+def _init_dec_layer(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 3)
+    return {"norm1": init_norm(cfg),
+            "attn": attention.init_attention(ks[0], cfg),
+            "norm_c": init_norm(cfg),
+            "cross": attention.init_attention(ks[1], cfg),
+            "norm2": init_norm(cfg),
+            "ffn": init_ffn(ks[2], cfg)}
+
+
+def init_encdec_stack(key, cfg: ModelConfig):
+    ke, kd = jax.random.split(key)
+    enc = jax.vmap(lambda k: _init_enc_layer(k, cfg))(
+        jax.random.split(ke, cfg.enc_layers))
+    dec = jax.vmap(lambda k: _init_dec_layer(k, cfg))(
+        jax.random.split(kd, cfg.n_layers))
+    return {"enc": enc, "dec": dec}
+
+
+def _cross_kv(p_cross, mem, cfg):
+    dt = cdtype(cfg)
+    k = jnp.einsum("bsd,dhk->bshk", mem, p_cross["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", mem, p_cross["wv"].astype(dt))
+    if "bk" in p_cross:
+        k, v = k + p_cross["bk"].astype(dt), v + p_cross["bv"].astype(dt)
+    return k, v
+
+
+def run_encoder(params, frames, cfg: ModelConfig, masks=None, unroll=False):
+    """frames: (B,S,d). Bidirectional."""
+    S = frames.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = shard(frames.astype(cdtype(cfg)), "B", None, None)
+
+    def body(carry, xs):
+        xc = carry
+        p, m = xs
+        h = apply_norm(p["norm1"], xc, cfg)
+        y, _ = attention.attn_seq(p["attn"], h, cfg, positions,
+                                  causal=False, unroll=unroll)
+        xc = xc + y
+        h2 = apply_norm(p["norm2"], xc, cfg)
+        nm = m.get("ffn") if m is not None else None
+        xc = xc + apply_ffn(p["ffn"], h2, cfg, neuron_mask=nm)
+        return shard(xc, "B", "M", None), 0
+
+    fn = jax.checkpoint(body) if cfg.remat == "block" else body
+    x, _ = jax.lax.scan(fn, x, (params["enc"], masks), length=cfg.enc_layers)
+    return x
+
+
+def _dec_layer_seq(p, x, mem_kv, cfg, positions, mask, window_override,
+                   unroll, want_cache, cache_len=None):
+    mem_k, mem_v = mem_kv
+    win = window_override
+    h = apply_norm(p["norm1"], x, cfg)
+    y, (k, v) = attention.attn_seq(p["attn"], h, cfg, positions, window=win,
+                                   unroll=unroll)
+    cache = {}
+    if want_cache:
+        from repro.models.transformer import _ring_from_seq
+        cache["attn"] = _ring_from_seq({"k": k, "v": v}, positions, win, cfg,
+                                       cache_len)
+        cache["cross_k"], cache["cross_v"] = mem_k, mem_v
+    x = x + y
+    hc = apply_norm(p["norm_c"], x, cfg)
+    mpos = jnp.zeros((mem_k.shape[1],), jnp.int32)
+    y, _ = attention.attn_seq(p["cross"], hc, cfg, positions,
+                              kv_override=(mem_k, mem_v), kv_positions=mpos,
+                              unroll=unroll)
+    x = x + y
+    h2 = apply_norm(p["norm2"], x, cfg)
+    nm = mask.get("ffn") if mask is not None else None
+    x = x + apply_ffn(p["ffn"], h2, cfg, neuron_mask=nm)
+    return x, cache
+
+
+def run_decoder_seq(params, x, memory, cfg: ModelConfig, positions,
+                    masks=None, window_override=None, unroll=False,
+                    want_cache=False, cache_len=None):
+    """x: (B,S,d) decoder token embeddings; memory: (B,M,d)."""
+    def body(xc, xs):
+        p, m = xs
+        mem_kv = _cross_kv(p["cross"], memory, cfg)
+        xc, cache = _dec_layer_seq(p, xc, mem_kv, cfg, positions, m,
+                                   window_override, unroll, want_cache,
+                                   cache_len)
+        return shard(xc, "B", "M", None), (cache if want_cache else 0)
+
+    fn = jax.checkpoint(body) if cfg.remat == "block" else body
+    x, caches = jax.lax.scan(fn, x, (params["dec"], masks),
+                             length=cfg.n_layers)
+    return x, (caches if want_cache else None)
+
+
+def run_decoder_decode(params, caches, x, cfg: ModelConfig, pos, masks=None,
+                       window_override=None):
+    """x: (B,1,d)."""
+    def body(xc, xs):
+        p, c, m = xs
+        h = apply_norm(p["norm1"], xc, cfg)
+        y, cc, slots = attention.attn_decode(
+            p["attn"], h, cfg, {k: c["attn"][k] for k in ("k", "v")},
+            c["attn"]["slots"], pos, window=window_override)
+        cc["slots"] = slots
+        xc = xc + y
+        hc = apply_norm(p["norm_c"], xc, cfg)
+        mpos = jnp.zeros((c["cross_k"].shape[1],), jnp.int32)
+        y, _ = attention.attn_seq(p["cross"], hc, cfg, pos[:, None],
+                                  kv_override=(c["cross_k"], c["cross_v"]),
+                                  kv_positions=mpos)
+        xc = xc + y
+        h2 = apply_norm(p["norm2"], xc, cfg)
+        nm = m.get("ffn") if m is not None else None
+        xc = xc + apply_ffn(p["ffn"], h2, cfg, neuron_mask=nm)
+        new_c = dict(c)
+        new_c["attn"] = cc
+        return xc, new_c
+
+    x, nc = jax.lax.scan(body, x, (params["dec"], caches, masks),
+                         length=cfg.n_layers)
+    return x, nc
+
+
+def dec_cache_specs(cfg: ModelConfig, batch, seq_len, mem_len,
+                    window_override=None):
+    C = seq_len if window_override is None else min(window_override, seq_len)
+    dt = jnp.dtype(cfg.dtype)
+    per = {"attn": dict(attention.cache_spec(cfg, batch, C),
+                        slots=jax.ShapeDtypeStruct((batch, C), jnp.int32)),
+           "cross_k": jax.ShapeDtypeStruct(
+               (batch, mem_len, cfg.n_kv_heads, cfg.head_dim), dt),
+           "cross_v": jax.ShapeDtypeStruct(
+               (batch, mem_len, cfg.n_kv_heads, cfg.head_dim), dt)}
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((cfg.n_layers,) + s.shape, s.dtype),
+        per)

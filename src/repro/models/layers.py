@@ -1,0 +1,173 @@
+"""Shared layer primitives: norms, RoPE, embeddings, FFN variants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import shard
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def pdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+
+def dense_init(key, fan_in, *shape, dtype):
+    scale = 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+
+def init_norm(cfg: ModelConfig, dim=None):
+    dim = dim or cfg.d_model
+    p = {"scale": jnp.ones((dim,), pdtype(cfg))}
+    if cfg.norm_kind == "layernorm":
+        p["bias"] = jnp.zeros((dim,), pdtype(cfg))
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_kind == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, dim, 2, dtype=np.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float, has_heads: bool = True):
+    """x: (..., S, H, hd) if has_heads else (..., S, hd); positions: (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))          # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    if has_heads:
+        ang = ang[..., None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+
+def init_embed(key, cfg: ModelConfig):
+    v = cfg.padded_vocab
+    p = {"embed": dense_init(key, cfg.d_model, v, cfg.d_model,
+                             dtype=pdtype(cfg))}
+    if not cfg.tie_embeddings:
+        k2 = jax.random.fold_in(key, 1)
+        p["lm_head"] = dense_init(k2, cfg.d_model, cfg.d_model, v,
+                                  dtype=pdtype(cfg))
+    return p
+
+
+def embed_tokens(p, tokens, cfg: ModelConfig):
+    emb = shard(p["embed"].astype(cdtype(cfg)), "M", None)
+    x = jnp.take(emb, tokens, axis=0)
+    return shard(x, "B", None, None)
+
+
+def lm_logits(p, x, cfg: ModelConfig):
+    w = p.get("lm_head")
+    if w is None:
+        w = p["embed"].T
+    logits = jnp.einsum("...d,dv->...v", x, w.astype(cdtype(cfg)))
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return shard(logits, "B", None, "M")
+
+
+# ---------------------------------------------------------------------------
+# FFN
+
+GATED = {"swiglu", "gelu_gated"}
+
+
+def init_ffn(key, cfg: ModelConfig, d_ff=None):
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], d, d, f, dtype=pdtype(cfg)),
+         "w_out": dense_init(ks[1], f, f, d, dtype=pdtype(cfg))}
+    if cfg.ffn_kind in GATED:
+        p["w_gate"] = dense_init(ks[2], d, d, f, dtype=pdtype(cfg))
+    if cfg.use_bias:
+        p["b_in"] = jnp.zeros((f,), pdtype(cfg))
+        p["b_out"] = jnp.zeros((d,), pdtype(cfg))
+        if cfg.ffn_kind in GATED:
+            p["b_gate"] = jnp.zeros((f,), pdtype(cfg))
+    return p
+
+
+def _act(h, kind):
+    if kind in ("swiglu",):
+        return jax.nn.silu(h)
+    if kind in ("gelu", "gelu_gated"):
+        return jax.nn.gelu(h)
+    if kind == "relu":
+        return jax.nn.relu(h)
+    if kind == "relu2":
+        return jnp.square(jax.nn.relu(h))
+    raise ValueError(kind)
+
+
+def apply_ffn(p, x, cfg: ModelConfig, neuron_mask=None):
+    """FFN with optional neuron mask (Invariant-Dropout masked sub-model).
+
+    neuron_mask: (f,) 0/1 — masked neurons contribute nothing; identical in
+    math to physically extracting the sub-model columns.
+    """
+    dt = cdtype(cfg)
+    h = jnp.einsum("...d,df->...f", x, p["w_in"].astype(dt))
+    if "b_in" in p:
+        h = h + p["b_in"].astype(dt)
+    if cfg.ffn_kind in GATED:
+        g = jnp.einsum("...d,df->...f", x, p["w_gate"].astype(dt))
+        if "b_gate" in p:
+            g = g + p["b_gate"].astype(dt)
+        h = _act(g, cfg.ffn_kind) * h
+    else:
+        h = _act(h, cfg.ffn_kind)
+    h = shard(h, "B", None, "M")
+    if neuron_mask is not None:
+        h = h * neuron_mask.astype(dt)
+    out = jnp.einsum("...f,fd->...d", h, p["w_out"].astype(dt))
+    if "b_out" in p:
+        out = out + p["b_out"].astype(dt)
+    return shard(out, "B", None, None)
+
+
+# ---------------------------------------------------------------------------
+# losses
+
+def softmax_xent(logits, targets, mask=None, vocab_size=None):
+    """Mean cross-entropy; ignores padded vocab tail via target clamp."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), targets[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)

@@ -1,0 +1,153 @@
+"""Multi-head Latent Attention (DeepSeek-V2 / MiniCPM3).
+
+KV is compressed to a latent c_kv of rank ``kv_lora_rank`` plus a shared
+rope-carrying key slice. The decode cache stores only (c_kv, k_rope).
+
+Two decode paths:
+  * baseline  -- expand K/V from the latent for every cached slot (faithful
+                 to the reference formulation)
+  * absorbed  -- absorb W_uk / W_uv into the query/output projections and
+                 attend directly in latent space (beyond-paper perf path;
+                 cuts decode memory traffic by ~H*(nope+v)/lora)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import shard
+from repro.models.attention import NEG
+from repro.models.layers import apply_rope, cdtype, dense_init, pdtype
+
+
+def init_mla(key, cfg: ModelConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    nope, rope, vd, lora = (cfg.qk_nope_dim, cfg.qk_rope_dim,
+                            cfg.v_head_dim, cfg.kv_lora_rank)
+    ks = jax.random.split(key, 8)
+    p = {}
+    if cfg.q_lora_rank:
+        p["w_dq"] = dense_init(ks[0], d, d, cfg.q_lora_rank, dtype=pdtype(cfg))
+        p["w_uq"] = dense_init(ks[1], cfg.q_lora_rank, cfg.q_lora_rank, H,
+                               nope + rope, dtype=pdtype(cfg))
+        p["q_norm"] = jnp.ones((cfg.q_lora_rank,), pdtype(cfg))
+    else:
+        p["wq"] = dense_init(ks[0], d, d, H, nope + rope, dtype=pdtype(cfg))
+    p["w_dkv"] = dense_init(ks[2], d, d, lora + rope, dtype=pdtype(cfg))
+    p["kv_norm"] = jnp.ones((lora,), pdtype(cfg))
+    p["w_uk"] = dense_init(ks[3], lora, lora, H, nope, dtype=pdtype(cfg))
+    p["w_uv"] = dense_init(ks[4], lora, lora, H, vd, dtype=pdtype(cfg))
+    p["wo"] = dense_init(ks[5], H * vd, H, vd, d, dtype=pdtype(cfg))
+    return p
+
+
+def _rms(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def _queries(p, x, cfg: ModelConfig, positions):
+    dt = cdtype(cfg)
+    nope, rope = cfg.qk_nope_dim, cfg.qk_rope_dim
+    if cfg.q_lora_rank:
+        cq = _rms(jnp.einsum("bsd,dr->bsr", x, p["w_dq"].astype(dt)),
+                  p["q_norm"])
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"].astype(dt))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(dt))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return shard(q_nope, "B", None, "M", None), shard(q_rope, "B", None, "M", None)
+
+
+def _latent(p, x, cfg: ModelConfig, positions):
+    dt = cdtype(cfg)
+    lora = cfg.kv_lora_rank
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["w_dkv"].astype(dt))
+    c_kv = _rms(ckv_full[..., :lora], p["kv_norm"])
+    k_rope = apply_rope(ckv_full[..., lora:], positions, cfg.rope_theta, has_heads=False)
+    return c_kv, k_rope
+
+
+def _attend(p, q_nope, q_rope, c_kv, k_rope, cfg, q_pos, kv_pos):
+    """Baseline attention: expand k,v from latent. Shapes:
+    q_*: (B,Sq,H,·)  c_kv: (B,T,lora)  k_rope: (B,T,rope)."""
+    dt = cdtype(cfg)
+    scale = 1.0 / np.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    k_nope = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uk"].astype(dt))
+    v = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uv"].astype(dt))
+    s = (jnp.einsum("bqhk,bthk->bhqt", q_nope, k_nope)
+         + jnp.einsum("bqhk,btk->bhqt", q_rope, k_rope))
+    s = s.astype(jnp.float32) * scale
+    qb = q_pos[:, None, :, None] if q_pos.ndim == 2 else q_pos[None, None, :, None]
+    kb = kv_pos[:, None, None, :] if kv_pos.ndim == 2 else kv_pos[None, None, None, :]
+    s = jnp.where((kb >= 0) & (kb <= qb), s, NEG)
+    w = jax.nn.softmax(s, axis=-1).astype(dt)
+    out = jnp.einsum("bhqt,bthk->bqhk", w, v)
+    y = jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(dt))
+    return shard(y, "B", None, None)
+
+
+def mla_seq(p, x, cfg: ModelConfig, positions, unroll=False):
+    """Train/prefill. Returns (y, (c_kv, k_rope)) for cache capture."""
+    B, S, _ = x.shape
+    q_nope, q_rope = _queries(p, x, cfg, positions)
+    c_kv, k_rope = _latent(p, x, cfg, positions)
+    CH = 1024
+    if S <= CH:
+        y = _attend(p, q_nope, q_rope, c_kv, k_rope, cfg, positions, positions)
+    else:
+        n = S // CH
+
+        def body(_, qp):
+            qn, qr, pi = qp
+            return (), _attend(p, qn, qr, c_kv, k_rope, cfg, pi, positions)
+        if not unroll:
+            body = jax.checkpoint(body)
+        qn = q_nope.reshape(B, n, CH, *q_nope.shape[2:]).transpose(1, 0, 2, 3, 4)
+        qr = q_rope.reshape(B, n, CH, *q_rope.shape[2:]).transpose(1, 0, 2, 3, 4)
+        pc = positions.reshape(n, CH)
+        _, yc = jax.lax.scan(body, (), (qn, qr, pc), unroll=(n if unroll else 1))
+        y = yc.transpose(1, 0, 2, 3).reshape(B, S, -1)
+    return y, (c_kv, k_rope)
+
+
+def mla_decode(p, x, cfg: ModelConfig, cache, slot_pos, pos, absorb=False):
+    """cache: {'c_kv': (B,C,lora), 'k_rope': (B,C,rope)}."""
+    dt = cdtype(cfg)
+    C = cache["c_kv"].shape[1]
+    q_nope, q_rope = _queries(p, x, cfg, pos[:, None])
+    c_new, kr_new = _latent(p, x, cfg, pos[:, None])
+
+    idx = (pos % C).astype(jnp.int32)
+    upd = (jnp.arange(C, dtype=jnp.int32)[None, :] == idx[:, None])
+    ckv = jnp.where(upd[:, :, None], c_new, cache["c_kv"])
+    krope = jnp.where(upd[:, :, None], kr_new, cache["k_rope"])
+    new_slots = jnp.where(upd, pos[:, None], slot_pos)
+
+    if not absorb:
+        y = _attend(p, q_nope, q_rope, ckv, krope, cfg, pos[:, None], new_slots)
+    else:
+        scale = 1.0 / np.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+        # absorb W_uk into q, attend in latent space, then W_uv on the output
+        q_eff = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["w_uk"].astype(dt))
+        s = (jnp.einsum("bqhr,btr->bhqt", q_eff, ckv)
+             + jnp.einsum("bqhk,btk->bhqt", q_rope, krope))
+        s = s.astype(jnp.float32) * scale
+        kb = new_slots[:, None, None, :]
+        s = jnp.where((kb >= 0) & (kb <= pos[:, None, None, None]), s, NEG)
+        w = jax.nn.softmax(s, axis=-1).astype(dt)
+        lat = jnp.einsum("bhqt,btr->bqhr", w, ckv)
+        out = jnp.einsum("bqhr,rhk->bqhk", lat, p["w_uv"].astype(dt))
+        y = jnp.einsum("bqhk,hkd->bqd", out, p["wo"].astype(dt))
+        y = shard(y, "B", None, None)
+    return y, {"c_kv": ckv, "k_rope": krope}, new_slots
+
+
+def cache_spec(cfg: ModelConfig, batch: int, cache_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    return {"c_kv": jax.ShapeDtypeStruct((batch, cache_len, cfg.kv_lora_rank), dt),
+            "k_rope": jax.ShapeDtypeStruct((batch, cache_len, cfg.qk_rope_dim), dt)}

@@ -1,0 +1,264 @@
+"""RWKV-6 "Finch": data-dependent decay linear attention + channel mix.
+
+TPU adaptation: training/prefill use a *chunked* formulation — intra-chunk
+work is a batched (c, c, N) contraction (matrix units), inter-chunk state is
+a short scan — instead of a length-S sequential scan. All decay products are
+expressed as exp(sum-of-logs differences) that are provably <= 0, so the
+chunked path never overflows regardless of decay magnitude.
+
+Recurrence per head (key/value dim N):
+  S_t = diag(w_t) S_{t-1} + k_t v_t^T
+  y_t = r_t^T S_{t-1} + (r_t . (u ⊙ k_t)) v_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import shard
+from repro.models.layers import cdtype, dense_init, pdtype
+
+LORA_MIX = 32
+LORA_DECAY = 64
+
+
+def init_tmix(key, cfg: ModelConfig):
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    pd = pdtype(cfg)
+    p = {
+        "mix_x": jnp.full((d,), 0.5, pd),
+        "mix_r": jnp.full((d,), 0.5, pd),
+        "mix_k": jnp.full((d,), 0.5, pd),
+        "mix_v": jnp.full((d,), 0.5, pd),
+        "mix_w": jnp.full((d,), 0.5, pd),
+        "mix_g": jnp.full((d,), 0.5, pd),
+        "lora_mix_a": dense_init(ks[0], d, d, 5 * LORA_MIX, dtype=pd),
+        "lora_mix_b": (jnp.zeros((5, LORA_MIX, d), pd)
+                       + 1e-3 * jax.random.normal(ks[1], (5, LORA_MIX, d), pd)),
+        "w_decay": jnp.asarray(
+            jnp.linspace(-6.0, -1.0, d), pd),           # w0: resting decay
+        "lora_w_a": dense_init(ks[2], d, d, LORA_DECAY, dtype=pd),
+        "lora_w_b": 1e-3 * jax.random.normal(ks[3], (LORA_DECAY, d), pd),
+        "w_u": jax.random.normal(ks[4], (d,), pd) * 0.1,  # bonus
+        "w_r": dense_init(ks[5], d, d, d, dtype=pd),
+        "w_k": dense_init(ks[6], d, d, d, dtype=pd),
+        "w_v": dense_init(ks[7], d, d, d, dtype=pd),
+        "w_g": dense_init(ks[8], d, d, d, dtype=pd),
+        "w_o": dense_init(ks[9], d, d, d, dtype=pd),
+        "ln_scale": jnp.ones((d,), pd),
+        "ln_bias": jnp.zeros((d,), pd),
+    }
+    return p
+
+
+def init_cmix(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    pd = pdtype(cfg)
+    return {"mix_k": jnp.full((d,), 0.5, pd),
+            "mix_r": jnp.full((d,), 0.5, pd),
+            "w_in": dense_init(ks[0], d, d, f, dtype=pd),
+            "w_out": dense_init(ks[1], f, f, d, dtype=pd),
+            "w_r": dense_init(ks[2], d, d, d, dtype=pd)}
+
+
+# ---------------------------------------------------------------------------
+
+
+def _ddlerp(p, x, x_prev, cfg):
+    """Data-dependent token-shift mixing -> (xr, xk, xv, xw, xg)."""
+    dt = cdtype(cfg)
+    xx = x_prev - x
+    sx = x + xx * p["mix_x"].astype(dt)
+    z = jnp.tanh(jnp.einsum("...d,dr->...r", sx, p["lora_mix_a"].astype(dt)))
+    z = z.reshape(*z.shape[:-1], 5, LORA_MIX)
+    delta = jnp.einsum("...fr,frd->...fd", z, p["lora_mix_b"].astype(dt))
+    outs = []
+    for i, nm in enumerate(("mix_r", "mix_k", "mix_v", "mix_w", "mix_g")):
+        m = p[nm].astype(dt) + delta[..., i, :]
+        outs.append(x + xx * m)
+    return outs
+
+
+def _rkvwg(p, x, x_prev, cfg):
+    dt = cdtype(cfg)
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev, cfg)
+    r = jnp.einsum("...d,de->...e", xr, p["w_r"].astype(dt))
+    k = jnp.einsum("...d,de->...e", xk, p["w_k"].astype(dt))
+    v = jnp.einsum("...d,de->...e", xv, p["w_v"].astype(dt))
+    g = jnp.einsum("...d,de->...e", xg, p["w_g"].astype(dt))
+    ww = (p["w_decay"].astype(jnp.float32)
+          + jnp.tanh(jnp.einsum("...d,dr->...r", xw,
+                                p["lora_w_a"].astype(dt))).astype(jnp.float32)
+          @ p["lora_w_b"].astype(jnp.float32))
+    logw = -jnp.exp(ww)                                   # log decay, < 0
+    return r, k, v, g, logw
+
+
+def _heads(x, H, N):
+    return x.reshape(*x.shape[:-1], H, N)
+
+
+def _group_norm(p, y, H, N, eps=1e-5):
+    yf = y.astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yn = (yf - mu) * jax.lax.rsqrt(var + eps)
+    yn = yn.reshape(*y.shape[:-2], H * N)
+    return (yn * p["ln_scale"].astype(jnp.float32)
+            + p["ln_bias"].astype(jnp.float32))
+
+
+def _chunk_core(r, k, v, logw, u, S0, chunk_dtype=jnp.float32):
+    """One chunk. r,k,v: (B,c,H,N); logw: (B,c,H,N) fp32; S0: (B,H,N,N) fp32.
+    Returns (y: (B,c,H,N) fp32, S1). chunk_dtype controls the decay-tensor
+    einsum precision (all exponents are <= 0, so bf16 only loses mantissa on
+    already-damped terms)."""
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    L_inc = jnp.cumsum(logw, axis=1)                      # inclusive
+    L_exc = L_inc - logw                                  # exclusive
+    L_tot = L_inc[:, -1:]                                 # (B,1,H,N)
+
+    # inter-chunk: y_t += (r_t * exp(L_exc_t)) @ S0
+    q_dec = rf * jnp.exp(L_exc)
+    y = jnp.einsum("bchn,bhnm->bchm", q_dec, S0)
+
+    # intra-chunk strict-lower part: D[t,j,n] = exp(L_exc[t] - L_inc[j]) <= 1
+    Dlog = L_exc[:, :, None] - L_inc[:, None, :]          # (B,c,c,H,N)
+    c = r.shape[1]
+    tri = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])
+    D = jnp.where(tri[None, :, :, None, None], jnp.exp(Dlog),
+                  0.0).astype(chunk_dtype)
+    scores = jnp.einsum("bthn,bjhn,btjhn->bthj", rf.astype(chunk_dtype),
+                        kf.astype(chunk_dtype), D).astype(jnp.float32)
+    y = y + jnp.einsum("bthj,bjhm->bthm", scores, vf)
+
+    # diagonal bonus term
+    diag = jnp.einsum("bthn,bthn->bth", rf, u[None, None] * kf)
+    y = y + diag[..., None] * vf
+
+    # state update: S1 = exp(L_tot) ⊙ S0 + sum_j exp(L_tot - L_inc_j) k_j v_j^T
+    k_hat = kf * jnp.exp(L_tot - L_inc)
+    S1 = jnp.exp(L_tot)[:, 0, :, :, None] * S0 + jnp.einsum(
+        "bjhn,bjhm->bhnm", k_hat, vf)
+    return y, S1
+
+
+def tmix_seq(p, x, cfg: ModelConfig, shift_in=None, state_in=None,
+             unroll=False):
+    """x: (B,S,d). Returns (y, last_x, state_out)."""
+    B, S, d = x.shape
+    H, N = cfg.rwkv_heads, cfg.rwkv_head_size
+    dt = cdtype(cfg)
+    if shift_in is None:
+        shift_in = jnp.zeros((B, d), dt)
+    if state_in is None:
+        state_in = jnp.zeros((B, H, N, N), jnp.float32)
+    x_prev = jnp.concatenate([shift_in[:, None], x[:, :-1]], axis=1)
+    r, k, v, g, logw = _rkvwg(p, x, x_prev, cfg)
+    u = _heads(p["w_u"].astype(jnp.float32), H, N)
+
+    c = min(cfg.rwkv_chunk, S)
+    while S % c:
+        c -= 1
+    nc = S // c
+
+    def to_chunks(t):
+        return t.reshape(B, nc, c, H, N).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc = (to_chunks(_heads(t, H, N)) for t in (r, k, v))
+    wc = to_chunks(_heads(logw, H, N))
+
+    cdt = jnp.dtype(cfg.rwkv_chunk_dtype)
+
+    def body(S0, inp):
+        ri, ki, vi, wi = inp
+        y, S1 = _chunk_core(ri, ki, vi, wi, u, S0, chunk_dtype=cdt)
+        return S1, y
+    if not unroll:
+        body = jax.checkpoint(body)
+    state_out, yc = jax.lax.scan(body, state_in, (rc, kc, vc, wc),
+                                 unroll=(nc if unroll else 1))
+    y = yc.transpose(1, 0, 2, 3, 4).reshape(B, S, H, N)
+    y = _group_norm(p, y, H, N).astype(dt)
+    y = y * jax.nn.silu(g)
+    y = jnp.einsum("...d,de->...e", y, p["w_o"].astype(dt))
+    return shard(y, "B", None, None), x[:, -1], state_out
+
+
+def tmix_ref(p, x, cfg: ModelConfig, shift_in=None, state_in=None):
+    """Naive per-token recurrence — oracle for the chunked path."""
+    B, S, d = x.shape
+    H, N = cfg.rwkv_heads, cfg.rwkv_head_size
+    dt = cdtype(cfg)
+    if shift_in is None:
+        shift_in = jnp.zeros((B, d), dt)
+    if state_in is None:
+        state_in = jnp.zeros((B, H, N, N), jnp.float32)
+    x_prev = jnp.concatenate([shift_in[:, None], x[:, :-1]], axis=1)
+    r, k, v, g, logw = _rkvwg(p, x, x_prev, cfg)
+    u = _heads(p["w_u"].astype(jnp.float32), H, N)
+    rs, ks, vs = (_heads(t, H, N).astype(jnp.float32) for t in (r, k, v))
+    ws = jnp.exp(_heads(logw, H, N))
+
+    def step(S0, inp):
+        rt, kt, vt, wt = inp                              # (B,H,N)
+        y = (jnp.einsum("bhn,bhnm->bhm", rt, S0)
+             + jnp.einsum("bhn,bhn->bh", rt, u[None] * kt)[..., None] * vt)
+        S1 = wt[..., None] * S0 + kt[..., None] * vt[..., None, :]
+        return S1, y
+    swap = lambda t: t.transpose(1, 0, 2, 3)
+    state, ys = jax.lax.scan(step, state_in,
+                             (swap(rs), swap(ks), swap(vs), swap(ws)))
+    y = ys.transpose(1, 0, 2, 3)
+    y = _group_norm(p, y, H, N).astype(dt)
+    y = y * jax.nn.silu(g)
+    y = jnp.einsum("...d,de->...e", y, p["w_o"].astype(dt))
+    return y, x[:, -1], state
+
+
+def tmix_decode(p, x1, cfg: ModelConfig, shift_in, state_in):
+    """x1: (B,1,d); single-token recurrence."""
+    B, _, d = x1.shape
+    H, N = cfg.rwkv_heads, cfg.rwkv_head_size
+    dt = cdtype(cfg)
+    x_prev = shift_in[:, None]
+    r, k, v, g, logw = _rkvwg(p, x1, x_prev, cfg)
+    u = _heads(p["w_u"].astype(jnp.float32), H, N)
+    rt, kt, vt = (_heads(t[:, 0], H, N).astype(jnp.float32) for t in (r, k, v))
+    wt = jnp.exp(_heads(logw[:, 0], H, N))
+    y = (jnp.einsum("bhn,bhnm->bhm", rt, state_in)
+         + jnp.einsum("bhn,bhn->bh", rt, u[None] * kt)[..., None] * vt)
+    S1 = wt[..., None] * state_in + kt[..., None] * vt[..., None, :]
+    y = _group_norm(p, y[:, None], H, N).astype(dt)
+    y = y * jax.nn.silu(g)
+    y = jnp.einsum("...d,de->...e", y, p["w_o"].astype(dt))
+    return shard(y, "B", None, None), x1[:, -1], S1
+
+
+# ---------------------------------------------------------------------------
+
+
+def cmix_seq(p, x, cfg: ModelConfig, shift_in=None, neuron_mask=None):
+    B, S, d = x.shape
+    dt = cdtype(cfg)
+    if shift_in is None:
+        shift_in = jnp.zeros((B, d), dt)
+    x_prev = jnp.concatenate([shift_in[:, None], x[:, :-1]], axis=1)
+    xx = x_prev - x
+    xk = x + xx * p["mix_k"].astype(dt)
+    xr = x + xx * p["mix_r"].astype(dt)
+    h = jnp.square(jax.nn.relu(
+        jnp.einsum("...d,df->...f", xk, p["w_in"].astype(dt))))
+    h = shard(h, "B", None, "M")
+    if neuron_mask is not None:
+        h = h * neuron_mask.astype(dt)
+    kv = jnp.einsum("...f,fd->...d", h, p["w_out"].astype(dt))
+    rgate = jax.nn.sigmoid(jnp.einsum("...d,de->...e", xr, p["w_r"].astype(dt)))
+    return shard(rgate * kv, "B", None, None), x[:, -1]
+
+
+def cmix_decode(p, x1, cfg: ModelConfig, shift_in, neuron_mask=None):
+    y, last = cmix_seq(p, x1, cfg, shift_in=shift_in, neuron_mask=neuron_mask)
+    return y, x1[:, -1]

@@ -1,0 +1,377 @@
+"""Segment-based decoder stack.
+
+A model is a list of *segments*: (unit_pattern, repeats). A unit is a short
+tuple of LayerSpecs (mixer kind, ffn kind); params for a segment are stacked
+over repeats and the segment is evaluated with ``jax.lax.scan`` so HLO size is
+O(#segments), not O(depth). Mixed-pattern archs (RecurrentGemma 2:1,
+DeepSeek first-dense-layer) decompose into a few segments.
+
+Layer kinds:  attn | local_attn | rglru | rwkv    (mixer)
+              dense | moe | cmix                  (ffn)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.launch.sharding import shard
+from repro.models import attention, mla, moe, rglru, rwkv6
+from repro.models.layers import (apply_ffn, apply_norm, cdtype, init_ffn,
+                                 init_norm)
+
+LayerSpec = Tuple[str, str]        # (mixer, ffn)
+
+
+@dataclass(frozen=True)
+class Segment:
+    unit: Tuple[LayerSpec, ...]
+    repeats: int
+
+
+def layer_specs(cfg: ModelConfig) -> Tuple[LayerSpec, ...]:
+    out = []
+    for i in range(cfg.n_layers):
+        mixer = cfg.block_pattern[i % len(cfg.block_pattern)]
+        if mixer == "rwkv":
+            ffn = "cmix"
+        else:
+            ffn = cfg.ffn_kind_for_layer(i)
+        out.append((mixer, ffn))
+    return tuple(out)
+
+
+def _rle(specs):
+    runs = []
+    for s in specs:
+        if runs and runs[-1][0] == s:
+            runs[-1][1] += 1
+        else:
+            runs.append([s, 1])
+    return runs
+
+
+def build_segments(cfg: ModelConfig) -> Tuple[Segment, ...]:
+    specs = layer_specs(cfg)
+    runs = _rle(specs)
+    if len(runs) <= 3:
+        return tuple(Segment((s,), n) for s, n in runs)
+    unit = specs[:len(cfg.block_pattern)]
+    k = len(specs) // len(unit)
+    rem = specs[k * len(unit):]
+    segs = [Segment(unit, k)]
+    segs += [Segment((s,), n) for s, n in _rle(rem)]
+    return tuple(segs)
+
+
+# ---------------------------------------------------------------------------
+# init
+
+def _init_layer(key, spec: LayerSpec, cfg: ModelConfig):
+    mixer, ffn = spec
+    ks = jax.random.split(key, 4)
+    p = {"norm1": init_norm(cfg)}
+    if mixer in ("attn", "local_attn"):
+        p["attn" if not cfg.use_mla else "mla"] = (
+            attention.init_attention(ks[0], cfg) if not cfg.use_mla
+            else mla.init_mla(ks[0], cfg))
+    elif mixer == "rglru":
+        p["rglru"] = rglru.init_rglru(ks[0], cfg)
+    elif mixer == "rwkv":
+        p["rwkv"] = rwkv6.init_tmix(ks[0], cfg)
+    else:
+        raise ValueError(mixer)
+    if not cfg.parallel_block:
+        p["norm2"] = init_norm(cfg)
+    if ffn == "dense":
+        p["ffn"] = init_ffn(ks[1], cfg)
+    elif ffn == "moe":
+        p["moe"] = moe.init_moe(ks[1], cfg)
+    elif ffn == "cmix":
+        p["cmix"] = rwkv6.init_cmix(ks[1], cfg)
+    else:
+        raise ValueError(ffn)
+    return p
+
+
+def init_segment(key, seg: Segment, cfg: ModelConfig):
+    def init_unit(k):
+        kk = jax.random.split(k, len(seg.unit))
+        return {f"l{i}": _init_layer(kk[i], s, cfg)
+                for i, s in enumerate(seg.unit)}
+    keys = jax.random.split(key, seg.repeats)
+    return jax.vmap(init_unit)(keys)
+
+
+def init_stack(key, cfg: ModelConfig):
+    segs = build_segments(cfg)
+    keys = jax.random.split(key, len(segs))
+    return [init_segment(k, s, cfg) for k, s in zip(keys, segs)], segs
+
+
+# ---------------------------------------------------------------------------
+# sequence (train / prefill) pass
+
+def _layer_window(mixer: str, cfg: ModelConfig, window_override):
+    if mixer == "local_attn":
+        return cfg.window
+    if window_override is not None:         # long-context windowed variant
+        return window_override
+    return None
+
+
+def _apply_layer_seq(spec, p, x, cfg: ModelConfig, positions, masks,
+                     window_override, unroll, want_cache, cache_len=None):
+    """Returns (x, cache_entry, aux)."""
+    mixer, ffn = spec
+    aux = jnp.zeros((), jnp.float32)
+    cache = {}
+    h = apply_norm(p["norm1"], x, cfg)
+    if mixer in ("attn", "local_attn"):
+        win = _layer_window(mixer, cfg, window_override)
+        if cfg.use_mla:
+            y, (c_kv, k_rope) = mla.mla_seq(p["mla"], h, cfg, positions,
+                                            unroll=unroll)
+            if want_cache:
+                cache["mla"] = _ring_from_seq(
+                    {"c_kv": c_kv, "k_rope": k_rope}, positions, win, cfg,
+                    cache_len)
+        else:
+            y, (k, v) = attention.attn_seq(p["attn"], h, cfg, positions,
+                                           window=win, unroll=unroll)
+            if want_cache:
+                cache["attn"] = _ring_from_seq({"k": k, "v": v}, positions,
+                                               win, cfg, cache_len)
+        mix_out = y
+        shift_cm = None
+    elif mixer == "rglru":
+        y, st = rglru.rglru_seq(p["rglru"], h, cfg)
+        if want_cache:
+            cache["rglru"] = st
+        mix_out = y
+        shift_cm = None
+    elif mixer == "rwkv":
+        y, last_x, state = rwkv6.tmix_seq(p["rwkv"], h, cfg, unroll=unroll)
+        if want_cache:
+            cache["rwkv"] = {"S": state, "shift_tm": last_x}
+        mix_out = y
+        shift_cm = True
+    else:
+        raise ValueError(mixer)
+
+    if cfg.parallel_block:
+        f = apply_ffn(p["ffn"], h, cfg, neuron_mask=_m(masks, "ffn"))
+        return x + mix_out + f, cache, aux
+
+    x = x + mix_out
+    h2 = apply_norm(p["norm2"], x, cfg)
+    if ffn == "dense":
+        x = x + apply_ffn(p["ffn"], h2, cfg, neuron_mask=_m(masks, "ffn"))
+    elif ffn == "moe":
+        y, aux = moe.apply_moe(p["moe"], h2, cfg,
+                               neuron_mask=_m(masks, "moe"),
+                               expert_mask=_m(masks, "experts"))
+        x = x + y
+    elif ffn == "cmix":
+        y, last_cm = rwkv6.cmix_seq(p["cmix"], h2, cfg,
+                                    neuron_mask=_m(masks, "ffn"))
+        if want_cache and "rwkv" in cache:
+            cache["rwkv"]["shift_cm"] = last_cm
+        x = x + y
+    return x, cache, aux
+
+
+def _m(masks, key):
+    if masks is None:
+        return None
+    return masks.get(key)
+
+
+def _ring_from_seq(tensors, positions, window, cfg, cache_len=None):
+    """Fold full-sequence K/V (B,S,...) into a ring cache of length C.
+    cache_len > S leaves decode headroom (prefill-then-generate)."""
+    S = positions.shape[-1]
+    cap = cache_len or S
+    C = cap if window is None else min(window, cap)
+    out = {}
+    for name, t in tensors.items():
+        if C == S:
+            ring = t
+            slots = jnp.broadcast_to(positions, (t.shape[0], S)).astype(jnp.int32)
+        else:
+            # last min(C,S) positions land at slot pos % C
+            n = min(C, S)
+            tail = t[:, -n:]
+            ptail = positions[-n:]
+            idx = (ptail % C).astype(jnp.int32)
+            ring = jnp.zeros((t.shape[0], C) + t.shape[2:], t.dtype)
+            ring = ring.at[:, idx].set(tail)
+            slots = jnp.full((t.shape[0], C), -1, jnp.int32).at[:, idx].set(
+                ptail.astype(jnp.int32))
+        out[name] = ring
+    out["slots"] = slots
+    return out
+
+
+def run_stack_seq(seg_params, segs, x, cfg: ModelConfig, positions,
+                  masks=None, window_override=None, unroll=False,
+                  want_cache=False, cache_len=None):
+    """x: (B,S,d). Returns (x, caches, aux_sum). masks: list per segment of
+    per-unit dicts with stacked (R, ...) leaves, or None."""
+    aux_total = jnp.zeros((), jnp.float32)
+    caches = []
+    for si, (seg, sp) in enumerate(zip(segs, seg_params)):
+        smasks = masks[si] if masks is not None else None
+
+        def unit_body(carry, xs):
+            xc, auxc = carry
+            up, um = xs
+            cache_u = {}
+            for i, spec in enumerate(seg.unit):
+                lm = um[f"l{i}"] if um is not None else None
+                xc, ce, aux = _apply_layer_seq(
+                    spec, up[f"l{i}"], xc, cfg, positions, lm,
+                    window_override, unroll, want_cache, cache_len)
+                cache_u[f"l{i}"] = ce
+                auxc = auxc + aux
+            # sequence-sharded residual carry: the activation stored per layer
+            # for the remat backward is 1/|model| of the full stream
+            xc = shard(xc, "B", "M", None)
+            return (xc, auxc), (cache_u if want_cache else 0)
+
+        body = unit_body
+        if cfg.remat == "block":
+            body = jax.checkpoint(unit_body)
+        (x, aux_total), ys = jax.lax.scan(
+            body, (x, aux_total), (sp, smasks), length=seg.repeats)
+        caches.append(ys if want_cache else None)
+    return x, caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# decode pass
+
+def _apply_layer_decode(spec, p, x, cache, cfg: ModelConfig, pos, masks,
+                        window_override, mla_absorb=False):
+    mixer, ffn = spec
+    h = apply_norm(p["norm1"], x, cfg)
+    new_cache = dict(cache)
+    if mixer in ("attn", "local_attn"):
+        win = _layer_window(mixer, cfg, window_override)
+        if cfg.use_mla:
+            c = cache["mla"]
+            y, cc, slots = mla.mla_decode(p["mla"], h, cfg,
+                                          {k: c[k] for k in ("c_kv", "k_rope")},
+                                          c["slots"], pos,
+                                          absorb=mla_absorb)
+            cc["slots"] = slots
+            new_cache["mla"] = cc
+        else:
+            c = cache["attn"]
+            y, cc, slots = attention.attn_decode(
+                p["attn"], h, cfg, {k: c[k] for k in ("k", "v")},
+                c["slots"], pos, window=win)
+            cc["slots"] = slots
+            new_cache["attn"] = cc
+    elif mixer == "rglru":
+        y, st = rglru.rglru_decode(p["rglru"], h, cfg, cache["rglru"])
+        new_cache["rglru"] = st
+    elif mixer == "rwkv":
+        c = cache["rwkv"]
+        y, last_x, S1 = rwkv6.tmix_decode(p["rwkv"], h, cfg,
+                                          c["shift_tm"], c["S"])
+        new_cache["rwkv"] = {"S": S1, "shift_tm": last_x,
+                             "shift_cm": c["shift_cm"]}
+    else:
+        raise ValueError(mixer)
+
+    if cfg.parallel_block:
+        f = apply_ffn(p["ffn"], h, cfg, neuron_mask=_m(masks, "ffn"))
+        return x + y + f, new_cache
+
+    x = x + y
+    h2 = apply_norm(p["norm2"], x, cfg)
+    if ffn == "dense":
+        x = x + apply_ffn(p["ffn"], h2, cfg, neuron_mask=_m(masks, "ffn"))
+    elif ffn == "moe":
+        ym, _ = moe.apply_moe(p["moe"], h2, cfg,
+                              neuron_mask=_m(masks, "moe"),
+                              expert_mask=_m(masks, "experts"))
+        x = x + ym
+    elif ffn == "cmix":
+        ym, last_cm = rwkv6.cmix_decode(p["cmix"], h2, cfg,
+                                        cache["rwkv"]["shift_cm"],
+                                        neuron_mask=_m(masks, "ffn"))
+        new_cache["rwkv"]["shift_cm"] = last_cm
+        x = x + ym
+    return x, new_cache
+
+
+def run_stack_decode(seg_params, segs, caches, x, cfg: ModelConfig, pos,
+                     masks=None, window_override=None, mla_absorb=False):
+    """x: (B,1,d). Returns (x, new_caches)."""
+    new_caches = []
+    for si, (seg, sp) in enumerate(zip(segs, seg_params)):
+        smasks = masks[si] if masks is not None else None
+
+        def unit_body(xc, xs):
+            up, uc, um = xs
+            new_u = {}
+            for i, spec in enumerate(seg.unit):
+                lm = um[f"l{i}"] if um is not None else None
+                xc, nc = _apply_layer_decode(spec, up[f"l{i}"], xc,
+                                             uc[f"l{i}"], cfg, pos, lm,
+                                             window_override, mla_absorb)
+                new_u[f"l{i}"] = nc
+            return xc, new_u
+
+        x, nc = jax.lax.scan(unit_body, x, (sp, caches[si], smasks),
+                             length=seg.repeats)
+        new_caches.append(nc)
+    return x, new_caches
+
+
+# ---------------------------------------------------------------------------
+# cache specs
+
+def _layer_cache_spec(spec, cfg: ModelConfig, batch, seq_len, window_override):
+    mixer, ffn = spec
+    out = {}
+    if mixer in ("attn", "local_attn"):
+        win = _layer_window(mixer, cfg, window_override)
+        C = seq_len if win is None else min(win, seq_len)
+        if cfg.use_mla:
+            d = mla.cache_spec(cfg, batch, C)
+            d["slots"] = jax.ShapeDtypeStruct((batch, C), jnp.int32)
+            out["mla"] = d
+        else:
+            d = attention.cache_spec(cfg, batch, C)
+            d["slots"] = jax.ShapeDtypeStruct((batch, C), jnp.int32)
+            out["attn"] = d
+    elif mixer == "rglru":
+        out["rglru"] = rglru.state_spec(cfg, batch)
+    elif mixer == "rwkv":
+        H, N = cfg.rwkv_heads, cfg.rwkv_head_size
+        out["rwkv"] = {
+            "S": jax.ShapeDtypeStruct((batch, H, N, N), jnp.float32),
+            "shift_tm": jax.ShapeDtypeStruct((batch, cfg.d_model),
+                                             jnp.dtype(cfg.dtype)),
+            "shift_cm": jax.ShapeDtypeStruct((batch, cfg.d_model),
+                                             jnp.dtype(cfg.dtype))}
+    return out
+
+
+def stack_cache_specs(cfg: ModelConfig, batch, seq_len, window_override=None):
+    segs = build_segments(cfg)
+    out = []
+    for seg in segs:
+        unit = {f"l{i}": _layer_cache_spec(s, cfg, batch, seq_len,
+                                           window_override)
+                for i, s in enumerate(seg.unit)}
+        out.append(jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((seg.repeats,) + s.shape, s.dtype),
+            unit))
+    return out

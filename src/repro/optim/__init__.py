@@ -1,0 +1,2 @@
+from repro.optim.optim import (init_opt, opt_update, sgd, sgdm, adamw,
+                               make_optimizer)

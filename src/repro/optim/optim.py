@@ -1,0 +1,90 @@
+"""Minimal stacked-tree-aware optimizers: SGD, SGD-momentum, AdamW.
+
+State is a pytree mirroring params; works with (L, ...) stacked arrays and
+with sub-model (gathered) trees alike.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable   # (grads, state, params, lr) -> (new_params, new_state)
+
+
+def _zeros_like_tree(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def sgd():
+    def init(params):
+        return {}
+
+    def update(grads, state, params, lr):
+        new_p = jax.tree.map(lambda p, g: p - lr * g.astype(p.dtype),
+                             params, grads)
+        return new_p, state
+    return Optimizer("sgd", init, update)
+
+
+def sgdm(momentum=0.9):
+    """Momentum buffer keeps the *param* dtype (bf16 params at 480B scale
+    cannot afford an fp32 buffer)."""
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, lr):
+        m = jax.tree.map(lambda m_, g: momentum * m_ + g.astype(m_.dtype),
+                         state["m"], grads)
+        new_p = jax.tree.map(lambda p, m_: p - lr * m_.astype(p.dtype),
+                             params, m)
+        return new_p, {"m": m}
+    return Optimizer("sgdm", init, update)
+
+
+def adamw(b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.0):
+    def init(params):
+        return {"m": _zeros_like_tree(params),
+                "v": _zeros_like_tree(params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(
+            lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            if weight_decay:
+                step = step + weight_decay * p.astype(jnp.float32)
+            return p - (lr * step).astype(p.dtype)
+        new_p = jax.tree.map(upd, params, m, v)
+        return new_p, {"m": m, "v": v, "t": t}
+    return Optimizer("adamw", init, update)
+
+
+_FACTORIES = {"sgd": sgd, "sgdm": sgdm, "adamw": adamw}
+
+
+def make_optimizer(name: str) -> Optimizer:
+    return _FACTORIES[name]()
+
+
+def init_opt(name: str, params):
+    return make_optimizer(name).init(params)
+
+
+def opt_update(name: str, grads, state, params, lr):
+    return make_optimizer(name).update(grads, state, params, lr)

@@ -1,0 +1,6 @@
+import os
+
+# Tests must see the real device count (1 CPU); the 512-device flag is set
+# ONLY by the dry-run launcher. Guard against accidental inheritance.
+assert "xla_force_host_platform_device_count" not in os.environ.get(
+    "XLA_FLAGS", ""), "run pytest without the dry-run XLA_FLAGS"

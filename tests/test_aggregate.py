@@ -1,0 +1,31 @@
+"""Masked FedAvg aggregation."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregate import ClientUpdate, aggregate
+
+
+def test_plain_fedavg():
+    p = {"w": jnp.zeros((2, 2))}
+    u1 = ClientUpdate({"w": jnp.ones((2, 2))}, n_samples=1, client_id=0)
+    u2 = ClientUpdate({"w": 3 * jnp.ones((2, 2))}, n_samples=3, client_id=1)
+    out = aggregate(p, [u1, u2])
+    np.testing.assert_allclose(out["w"], (1 * 1 + 3 * 3) / 4 * np.ones((2, 2)))
+
+
+def test_masked_elements_use_partial_denominator():
+    p = {"w": jnp.zeros((2,))}
+    full = ClientUpdate({"w": jnp.array([1.0, 1.0])}, 1, None, client_id=0)
+    mask = {"w": jnp.array([1.0, 0.0])}
+    sub = ClientUpdate({"w": jnp.array([3.0, 999.0])}, 1, mask, client_id=1)
+    out = aggregate(p, [full, sub])
+    # element 0: (1+3)/2 ; element 1: only the full client contributes
+    np.testing.assert_allclose(out["w"], [2.0, 1.0])
+
+
+def test_all_masked_element_unchanged():
+    p = {"w": jnp.array([7.0])}
+    mask = {"w": jnp.array([0.0])}
+    sub = ClientUpdate({"w": jnp.array([5.0])}, 2, mask, client_id=0)
+    out = aggregate(p, [sub])
+    np.testing.assert_allclose(out["w"], [7.0])

@@ -1,0 +1,53 @@
+"""Random / Ordered / Invariant selection policies."""
+import numpy as np
+import pytest
+
+from repro.core.dropout import (DropoutPolicy, invariant_keep, keep_count,
+                                ordered_keep, random_keep)
+
+SPECS = [{"name": "a", "size": 10, "out": [], "in": []},
+         {"name": "b", "size": 20, "out": [], "in": []}]
+
+
+def test_keep_count():
+    assert keep_count(10, 0.75) == 8
+    assert keep_count(10, 0.05) == 1          # never empty
+
+
+def test_ordered_is_prefix():
+    np.testing.assert_array_equal(ordered_keep(10, 0.5), np.arange(5))
+
+
+def test_random_unique_sorted():
+    rng = np.random.RandomState(0)
+    k = random_keep(rng, 100, 0.65)
+    assert len(k) == 65 == len(set(k.tolist()))
+    assert np.all(np.diff(k) > 0)
+
+
+def test_invariant_drops_most_voted():
+    votes = np.array([5, 0, 5, 0, 5, 0, 0, 0, 0, 0])
+    stats = np.linspace(0.1, 1.0, 10)
+    keep = invariant_keep(votes, stats, r=0.7)      # drop 3
+    assert set([0, 2, 4]).isdisjoint(keep)
+    assert len(keep) == 7
+
+
+def test_invariant_tiebreak_by_stat():
+    votes = np.zeros(10)
+    stats = np.array([9, 1, 8, 2, 7, 3, 6, 4, 5, 0], float)
+    keep = invariant_keep(votes, stats, r=0.8)      # drop 2 smallest stats
+    assert 9 not in keep and 1 not in keep and 0 in keep
+    assert len(keep) == 8
+
+
+def test_policy_full_model_identity():
+    pol = DropoutPolicy("random", SPECS)
+    km = pol.keep_map(1.0)
+    assert all(len(km[g["name"]]) == g["size"] for g in SPECS)
+
+
+def test_policy_invariant_fallback_ordered():
+    pol = DropoutPolicy("invariant", SPECS)
+    km = pol.keep_map(0.5)          # no stats observed yet
+    np.testing.assert_array_equal(km["a"], np.arange(5))

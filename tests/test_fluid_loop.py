@@ -1,0 +1,57 @@
+"""FLuID server loop end-to-end on the paper workloads (small scale)."""
+import numpy as np
+import pytest
+
+from repro.fl.simulation import build_simulation
+
+
+@pytest.fixture(scope="module")
+def sim_hist():
+    sim = build_simulation("femnist", n_clients=5, straggler_ids=(0,),
+                           method="invariant", n_data=400, seed=0)
+    hist = sim.server.run(6, eval_every=6)
+    return sim, hist
+
+
+def test_straggler_detected_and_rate_assigned(sim_hist):
+    sim, hist = sim_hist
+    assert hist[-1].stragglers == [0]
+    assert 0 < hist[-1].rates[0] < 1.0
+
+
+def test_straggler_time_near_target(sim_hist):
+    """Paper Fig 4a: after FLuID the straggler lands within ~10% of
+    T_target."""
+    sim, hist = sim_hist
+    late = [h for h in hist if h.stragglers and h.straggler_time > 0]
+    assert late
+    h = late[-1]
+    assert h.straggler_time <= 1.15 * h.t_target
+
+
+def test_round_time_improves_vs_no_dropout():
+    times = {}
+    for method in ("none", "invariant"):
+        sim = build_simulation("femnist", n_clients=5, straggler_ids=(0,),
+                               method=method, n_data=400, seed=0)
+        hist = sim.server.run(5)
+        times[method] = np.mean([h.round_time for h in hist[2:]])
+    assert times["invariant"] < times["none"]
+
+
+def test_invariant_fraction_grows(sim_hist):
+    sim, hist = sim_hist
+    fr = [h.invariant_frac for h in hist if h.invariant_frac > 0]
+    assert fr and fr[-1] > 0.0
+
+
+def test_dynamic_straggler_recalibration():
+    """Paper Fig 4b: when the slow device changes, FLuID re-targets."""
+    sim = build_simulation("femnist", n_clients=4, straggler_ids=(0,),
+                           method="invariant", n_data=400, seed=1)
+    sim.server.run(3)
+    assert sim.server.plan.stragglers == [0]
+    sim.set_speed(0, 10.0)      # straggler recovers
+    sim.set_speed(2, 14.0)      # a different client degrades
+    sim.server.run(3)
+    assert sim.server.plan.stragglers == [2]

@@ -1,0 +1,75 @@
+"""Invariant-neuron statistics + threshold calibration (paper §4/§5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import invariant as inv
+
+SPECS = [{"name": "g", "size": 8,
+          "out": [("w", 1, 1), ("b", 0, 1)], "in": []}]
+
+
+def _trees(delta_scale):
+    rng = np.random.RandomState(0)
+    w = rng.randn(6, 8).astype(np.float32)
+    b = rng.randn(8).astype(np.float32)
+    prev = {"w": jnp.asarray(w), "b": jnp.asarray(b)}
+    d = np.zeros((6, 8), np.float32)
+    d[:, :4] = delta_scale          # neurons 0-3 change, 4-7 invariant
+    new = {"w": jnp.asarray(w + d), "b": jnp.asarray(b)}
+    return prev, new
+
+
+def test_stats_separate_changed_neurons():
+    prev, new = _trees(0.5)
+    s = inv.neuron_stats(prev, new, SPECS)["g"]
+    assert np.all(np.asarray(s[:4]) > np.asarray(s[4:]).max())
+    np.testing.assert_allclose(np.asarray(s[4:]), 0.0, atol=1e-7)
+
+
+def test_norm_stat_value():
+    prev, new = _trees(1.0)
+    s = np.asarray(inv.neuron_stats(prev, new, SPECS)["g"])
+    w = np.asarray(prev["w"])
+    b = np.asarray(prev["b"])
+    den = np.sqrt((w[:, 0] ** 2).sum() + b[0] ** 2)
+    np.testing.assert_allclose(s[0], np.sqrt(6.0) / (den + 1e-8), rtol=1e-5)
+
+
+def test_majority_vote():
+    prev, new = _trees(0.5)
+    quiet = inv.neuron_stats(prev, prev, SPECS)     # all zero
+    loud = inv.neuron_stats(prev, new, SPECS)
+    # 3 clients: 2 quiet, 1 loud -> all neurons invariant by majority
+    m = inv.invariant_mask([quiet, quiet, loud], th=1e-6)
+    assert m["g"].sum() == 8
+    # 1 quiet, 2 loud -> only 4 neurons invariant for the majority
+    m = inv.invariant_mask([quiet, loud, loud], th=1e-6)
+    assert m["g"].sum() == 4
+
+
+def test_threshold_calibration_monotone():
+    prev, new = _trees(0.5)
+    stats = [inv.neuron_stats(prev, new, SPECS)] * 3
+    th0 = inv.initial_threshold(stats)
+    th = inv.calibrate_threshold(stats, n_drop_target=6, th0=th0)
+    assert th >= th0
+    assert inv.count_invariant(stats, th) >= 6
+    # higher target -> higher (or equal) threshold
+    th2 = inv.calibrate_threshold(stats, n_drop_target=8, th0=th0)
+    assert th2 >= th
+
+
+@settings(max_examples=20, deadline=None)
+@given(scale=st.floats(1e-3, 10.0), seed=st.integers(0, 1000))
+def test_count_monotone_in_threshold(scale, seed):
+    rng = np.random.RandomState(seed)
+    w = rng.randn(5, 8).astype(np.float32)
+    prev = {"w": jnp.asarray(w), "b": jnp.zeros(8)}
+    new = {"w": jnp.asarray(w + scale * rng.randn(5, 8).astype(np.float32)),
+           "b": jnp.zeros(8)}
+    stats = [inv.neuron_stats(prev, new, SPECS)]
+    ths = [1e-4, 1e-2, 1.0, 100.0]
+    counts = [inv.count_invariant(stats, t) for t in ths]
+    assert counts == sorted(counts)

@@ -1,0 +1,111 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import (decode_gqa, invariant_stats, masked_ffn,
+                               neuron_mask_to_block_mask)
+
+
+@pytest.mark.parametrize("shape", [(64, 128), (300, 200), (1024, 96),
+                                   (17, 384)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_invariant_stats_sweep(shape, dtype):
+    k = jax.random.PRNGKey(0)
+    w0 = jax.random.normal(k, shape).astype(dtype)
+    w1 = (w0.astype(jnp.float32)
+          + 0.02 * jax.random.normal(jax.random.fold_in(k, 1), shape)
+          ).astype(dtype)
+    got = invariant_stats(w0, w1)
+    want = ref.invariant_stats_ref(w0, w1)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("M,d,F", [(100, 256, 512), (64, 128, 128),
+                                   (257, 64, 384)])
+@pytest.mark.parametrize("act,gated", [("silu", True), ("gelu", False),
+                                       ("relu2", False)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_masked_ffn_sweep(M, d, F, act, gated, dtype):
+    k = jax.random.PRNGKey(2)
+    x = jax.random.normal(k, (M, d)).astype(dtype)
+    win = (0.05 * jax.random.normal(jax.random.fold_in(k, 1), (d, F))
+           ).astype(dtype)
+    wout = (0.05 * jax.random.normal(jax.random.fold_in(k, 2), (F, d))
+            ).astype(dtype)
+    wg = ((0.05 * jax.random.normal(jax.random.fold_in(k, 3), (d, F))
+           ).astype(dtype) if gated else None)
+    rng = np.random.RandomState(M + F)
+    mask = jnp.asarray(rng.randint(0, 2, F // 128).astype(np.int32))
+    got = masked_ffn(x, win, wout, mask, w_gate=wg, act=act)
+    want = ref.masked_ffn_ref(x, win, wout, mask, w_gate=wg, act=act)
+    tol = 2e-3 if dtype == jnp.float32 else 4e-2
+    np.testing.assert_allclose(got.astype(np.float32),
+                               want.astype(np.float32), rtol=tol, atol=tol)
+
+
+def test_masked_ffn_all_dropped_is_zero():
+    k = jax.random.PRNGKey(3)
+    x = jax.random.normal(k, (32, 64))
+    win = jax.random.normal(jax.random.fold_in(k, 1), (64, 256))
+    wout = jax.random.normal(jax.random.fold_in(k, 2), (256, 64))
+    y = masked_ffn(x, win, wout, jnp.zeros(2, jnp.int32), act="gelu")
+    np.testing.assert_allclose(y, 0.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("B,H,KV,hd,C", [(2, 8, 2, 64, 512),
+                                         (1, 4, 4, 128, 300),
+                                         (3, 16, 1, 64, 1024)])
+def test_decode_gqa_sweep(B, H, KV, hd, C):
+    k = jax.random.PRNGKey(4)
+    q = jax.random.normal(k, (B, H, hd), jnp.float32)
+    kc = jax.random.normal(jax.random.fold_in(k, 1), (B, C, KV, hd))
+    vc = jax.random.normal(jax.random.fold_in(k, 2), (B, C, KV, hd))
+    lengths = jnp.asarray(
+        np.random.RandomState(B).randint(1, C + 1, (B,)), jnp.int32)
+    got = decode_gqa(q, kc, vc, lengths, block_c=128)
+    want = ref.decode_gqa_ref(q, kc, vc, lengths)
+    np.testing.assert_allclose(got, want, rtol=3e-4, atol=3e-4)
+
+
+import itertools
+
+
+@pytest.mark.parametrize("B,S,H,N,chunk", [(2, 32, 3, 16, 8),
+                                           (1, 24, 2, 32, 12),
+                                           (3, 16, 1, 64, 16)])
+def test_rwkv_chunk_scan_sweep(B, S, H, N, chunk):
+    from repro.kernels.ops import rwkv_chunk_scan
+    key = jax.random.PRNGKey(7)
+    r = jax.random.normal(key, (B, S, H, N))
+    kk = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, N))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, N))
+    logw = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 3),
+                                      (B, S, H, N)) - 1.0)
+    u = 0.3 * jax.random.normal(jax.random.fold_in(key, 4), (H, N))
+    y, st = rwkv_chunk_scan(r, kk, v, logw, u, chunk=chunk)
+    yr, sr = ref.rwkv_chunk_scan_ref(r, kk, v, logw, u)
+    np.testing.assert_allclose(y, yr, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(st, sr, rtol=2e-4, atol=2e-4)
+
+
+def test_rwkv_chunk_strong_decay_no_overflow():
+    from repro.kernels.ops import rwkv_chunk_scan
+    key = jax.random.PRNGKey(8)
+    B, S, H, N = 1, 32, 1, 16
+    r = jax.random.normal(key, (B, S, H, N))
+    kk = jax.random.normal(jax.random.fold_in(key, 1), (B, S, H, N))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, H, N))
+    logw = jnp.full((B, S, H, N), -8.0)     # near-total decay
+    u = jnp.zeros((H, N))
+    y, st = rwkv_chunk_scan(r, kk, v, logw, u, chunk=16)
+    assert bool(jnp.isfinite(y).all()) and bool(jnp.isfinite(st).all())
+
+
+def test_block_mask_conversion():
+    m = np.zeros(256)
+    m[5] = 1            # one surviving neuron keeps its block
+    np.testing.assert_array_equal(neuron_mask_to_block_mask(m), [1, 0])

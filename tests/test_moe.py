@@ -1,0 +1,83 @@
+"""MoE: routing math, masks, capacity semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import moe as moe_lib
+
+
+def _cfg(**kw):
+    return (get_config("deepseek-v2-lite-16b").smoke()
+            .with_overrides(dtype="float32", param_dtype="float32",
+                            n_shared_experts=0, **kw))
+
+
+def _naive_moe(p, x2d, cfg):
+    """Per-token loop reference (no capacity drops)."""
+    logits = x2d @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    topv, topi = jax.lax.top_k(probs, cfg.top_k)
+    topv = topv / topv.sum(-1, keepdims=True)
+    out = jnp.zeros_like(x2d)
+    for t in range(x2d.shape[0]):
+        acc = jnp.zeros(x2d.shape[1])
+        for j in range(cfg.top_k):
+            e = int(topi[t, j])
+            h = x2d[t] @ p["w_in"][e]
+            g = x2d[t] @ p["w_gate"][e]
+            h = jax.nn.silu(g) * h
+            acc = acc + topv[t, j] * (h @ p["w_out"][e])
+        out = out.at[t].set(acc)
+    return out
+
+
+def test_capacity_matches_naive_when_no_drops():
+    cfg = _cfg()
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, cfg.d_model)) * 0.5
+    y, aux = moe_lib.apply_moe(p, x, cfg)
+    # huge capacity factor: no token ever drops
+    cfg_hi = cfg.with_overrides(moe_capacity_factor=100.0)
+    y2, _ = moe_lib.apply_moe(p, x, cfg_hi)
+    ref = _naive_moe(p, x[0], cfg)
+    np.testing.assert_allclose(y2[0], ref, rtol=1e-4, atol=1e-4)
+
+
+def test_expert_mask_excludes_experts():
+    # expert-dropping concentrates load on survivors: raise capacity so no
+    # token drops (FLuID raises moe_capacity_factor when dropping experts)
+    cfg = _cfg(moe_capacity_factor=8.0)
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model))
+    em = jnp.zeros((cfg.n_experts,)).at[0].set(1.0)   # only expert 0 alive
+    y, _ = moe_lib.apply_moe(p, x, cfg, expert_mask=em)
+    # equals computing expert 0 alone on every token
+    x2d = x.reshape(-1, cfg.d_model)
+    h = x2d @ p["w_in"][0]
+    g = x2d @ p["w_gate"][0]
+    ref = (jax.nn.silu(g) * h) @ p["w_out"][0]
+    np.testing.assert_allclose(y.reshape(-1, cfg.d_model), ref,
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_neuron_mask_zeroes_units():
+    cfg = _cfg()
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 8, cfg.d_model))
+    nm_all = jnp.ones((cfg.n_experts, cfg.moe_ff))
+    nm_none = jnp.zeros((cfg.n_experts, cfg.moe_ff))
+    y1, _ = moe_lib.apply_moe(p, x, cfg, neuron_mask=nm_all)
+    y0, _ = moe_lib.apply_moe(p, x, cfg, neuron_mask=nm_none)
+    ybase, _ = moe_lib.apply_moe(p, x, cfg)
+    np.testing.assert_allclose(y1, ybase, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(y0, 0.0, atol=1e-6)
+
+
+def test_aux_loss_balanced_is_small():
+    cfg = _cfg()
+    p = moe_lib.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 64, cfg.d_model))
+    _, aux = moe_lib.apply_moe(p, x, cfg)
+    assert 0.5 < float(aux) < 4.0   # ~1 when perfectly balanced

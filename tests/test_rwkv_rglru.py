@@ -1,0 +1,73 @@
+"""Recurrent-layer numerics: chunked RWKV-6 vs naive recurrence; RG-LRU
+associative scan vs step-by-step decode; state continuation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.models import rglru as rg
+from repro.models import rwkv6 as rw
+
+
+def _cfg(chunk=8):
+    return (get_config("rwkv6-3b").smoke()
+            .with_overrides(dtype="float32", param_dtype="float32",
+                            rwkv_chunk=chunk))
+
+
+def test_chunked_matches_naive():
+    cfg = _cfg()
+    p = rw.init_tmix(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, cfg.d_model))
+    y1, last1, s1 = rw.tmix_seq(p, x, cfg)
+    y2, last2, s2 = rw.tmix_ref(p, x, cfg)
+    np.testing.assert_allclose(y1, y2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(s1, s2, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(chunk=st.sampled_from([2, 4, 6, 8, 24]), seed=st.integers(0, 100))
+def test_chunk_size_invariance(chunk, seed):
+    cfg = _cfg(chunk)
+    p = rw.init_tmix(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(seed), (1, 24, cfg.d_model))
+    y, _, s = rw.tmix_seq(p, x, cfg)
+    y_ref, _, s_ref = rw.tmix_ref(p, x, cfg)
+    np.testing.assert_allclose(y, y_ref, rtol=1e-4, atol=1e-4)
+
+
+def test_decode_continues_seq():
+    cfg = _cfg()
+    p = rw.init_tmix(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 17, cfg.d_model))
+    y_full, _, _ = rw.tmix_ref(p, x, cfg)
+    y_pre, last, state = rw.tmix_seq(p, x[:, :16], cfg)
+    y_dec, _, _ = rw.tmix_decode(p, x[:, 16:17], cfg, last, state)
+    np.testing.assert_allclose(y_dec[:, 0], y_full[:, 16], rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_rglru_decode_matches_seq():
+    cfg = (get_config("recurrentgemma-9b").smoke()
+           .with_overrides(dtype="float32", param_dtype="float32"))
+    p = rg.init_rglru(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 9, cfg.d_model))
+    y_full, st_full = rg.rglru_seq(p, x, cfg)
+    y_pre, st_pre = rg.rglru_seq(p, x[:, :8], cfg)
+    y_dec, st_dec = rg.rglru_decode(p, x[:, 8:9], cfg, st_pre)
+    np.testing.assert_allclose(y_dec[:, 0], y_full[:, 8], rtol=1e-4,
+                               atol=1e-4)
+    np.testing.assert_allclose(st_dec["h"], st_full["h"], rtol=1e-4,
+                               atol=1e-4)
+
+
+def test_rglru_decay_bounded():
+    cfg = (get_config("recurrentgemma-9b").smoke()
+           .with_overrides(dtype="float32", param_dtype="float32"))
+    p = rg.init_rglru(jax.random.PRNGKey(0), cfg)
+    x = 100.0 * jax.random.normal(jax.random.PRNGKey(1), (1, 64, cfg.d_model))
+    y, st = rg.rglru_seq(p, x, cfg)
+    assert bool(jnp.isfinite(y).all())
+    assert bool(jnp.isfinite(st["h"]).all())

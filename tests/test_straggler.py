@@ -1,0 +1,28 @@
+"""Straggler detection + linear-time sub-model sizing (paper §5)."""
+from repro.core import straggler as sg
+
+
+def test_detect_by_frac():
+    lat = {0: 13.0, 1: 10.0, 2: 10.2, 3: 9.9, 4: 10.1}
+    assert sg.detect_stragglers(lat, frac=0.2) == [0]
+
+
+def test_detect_auto_gap():
+    lat = {0: 13.0, 1: 10.0, 2: 10.2, 3: 9.9, 4: 10.1}
+    assert sg.detect_stragglers(lat) == [0]
+    lat2 = {0: 10.3, 1: 10.0, 2: 10.2, 3: 9.9, 4: 10.1}
+    assert sg.detect_stragglers(lat2) == []
+
+
+def test_plan_picks_inverse_speedup():
+    lat = {0: 13.0, 1: 10.0, 2: 9.8}
+    plan = sg.plan(lat, frac=None)
+    assert plan.stragglers == [0]
+    assert plan.t_target == 10.0
+    # speedup 1.3 -> 1/1.3 = 0.77 -> nearest predefined size 0.75
+    assert plan.rates[0] == 0.75
+
+
+def test_pick_rate_bounds():
+    assert sg.pick_rate(1.0) == 0.95
+    assert sg.pick_rate(2.5) == 0.5

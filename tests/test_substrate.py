@@ -1,0 +1,78 @@
+"""Substrate: optimizers, checkpointing, data pipeline, sharding rules."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_checkpoint, save_checkpoint
+from repro.data.partition import partition_iid, partition_non_iid
+from repro.data.synthetic import make_dataset
+from repro.launch import sharding as shlib
+from repro.launch.mesh import make_host_mesh
+from repro.optim import make_optimizer
+
+
+@pytest.mark.parametrize("name", ["sgd", "sgdm", "adamw"])
+def test_optimizer_reduces_quadratic(name):
+    opt = make_optimizer(name)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = opt.update(grads, state, params, lr=0.05)
+    np.testing.assert_allclose(params["w"], 0.0, atol=1e-2)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": {"b": jnp.arange(6).reshape(2, 3)},
+            "stack": [{"w": jnp.ones((2,))}, {"w": jnp.zeros((2,))}]}
+    path = os.path.join(tmp_path, "ck")
+    save_checkpoint(path, tree, meta={"step": 3})
+    back = load_checkpoint(path)
+    np.testing.assert_array_equal(back["a"]["b"], tree["a"]["b"])
+    np.testing.assert_array_equal(back["stack"][1]["w"], tree["stack"][1]["w"])
+
+
+def test_dataset_deterministic():
+    d1 = make_dataset("femnist", n=100, n_test=20, seed=3)
+    d2 = make_dataset("femnist", n=100, n_test=20, seed=3)
+    np.testing.assert_array_equal(d1.x, d2.x)
+    np.testing.assert_array_equal(d1.y, d2.y)
+
+
+def test_non_iid_partition_skews_writers():
+    ds = make_dataset("femnist", n=400, n_test=10, n_partitions=8, seed=0)
+    parts = partition_non_iid(ds, 4, seed=0)
+    assert sum(len(p) for p in parts) == len(ds.y)
+    # each client sees a strict subset of writers
+    for p in parts:
+        assert len(np.unique(ds.writer[p])) < 8
+
+
+def test_iid_partition_covers_all():
+    ds = make_dataset("cifar10", n=100, n_test=10, seed=0)
+    parts = partition_iid(ds, 3, seed=0)
+    got = np.sort(np.concatenate(parts))
+    np.testing.assert_array_equal(got, np.arange(100))
+
+
+def test_param_sharding_rules():
+    mesh = make_host_mesh(1, 1)
+    params = {"stack": {"seg0": {"l0": {
+        "attn": {"wq": jnp.zeros((4, 8, 2, 2))},
+        "ffn": {"w_in": jnp.zeros((4, 8, 16)), "w_out": jnp.zeros((4, 16, 8))},
+        "norm1": {"scale": jnp.zeros((8,))}}}},
+        "tok": {"embed": jnp.zeros((32, 8))}}
+    with shlib.mesh_context(mesh):
+        specs = shlib.param_pspecs(params)
+    l0 = specs["stack"]["seg0"]["l0"]
+    # model axis size 1 -> sharding demoted but rule paths must all resolve
+    assert specs["tok"]["embed"] is not None
+    assert l0["norm1"]["scale"] is not None
+
+
+def test_shard_identity_without_mesh():
+    x = jnp.ones((4, 4))
+    assert shlib.shard(x, "B", "M") is x
