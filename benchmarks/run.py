@@ -75,6 +75,53 @@ def bench_fig5_scalability():
                         if v["accuracy"] == v["accuracy"])
 
 
+def bench_fleet_scaling(out_path=None):
+    """Clients vs wall-clock, sequential vs fleet backend -> BENCH_fleet.json.
+
+    Same seeds, same rounds; only the execution engine differs. Wall-clock
+    includes compilation — that is the point: the fleet backend compiles one
+    cohort program while the sequential loop pays per-client dispatch and
+    per-sub-shape recompiles."""
+    import json
+    import pathlib
+
+    import jax
+
+    from repro.fl.simulation import build_simulation
+
+    out_path = out_path or (pathlib.Path(__file__).resolve().parent.parent
+                            / "BENCH_fleet.json")
+    fleet_sizes = (5, 50, 200) if FULL else (5, 50)
+    rounds = 5
+    per_client = 10      # cross-device regime: many clients, small shards
+    results = []
+    for n in fleet_sizes:
+        row = {"n_clients": n}
+        for backend in ("sequential", "fleet"):
+            sim = build_simulation(
+                "femnist", n_clients=n, straggler_ids=(0,),
+                method="invariant", n_data=per_client * n, seed=0,
+                backend=backend)
+            t0 = time.perf_counter()
+            sim.server.run(rounds)
+            row[f"{backend}_s"] = round(time.perf_counter() - t0, 3)
+        row["speedup"] = round(row["sequential_s"] / row["fleet_s"], 2)
+        results.append(row)
+    payload = {
+        "bench": "fleet_scaling", "workload": "femnist",
+        "method": "invariant", "rounds": rounds,
+        "samples_per_client": per_client,
+        "jax": jax.__version__,
+        "device": jax.devices()[0].platform,
+        "results": results,
+    }
+    out_path.write_text(json.dumps(payload, indent=2) + "\n")
+    us = sum(r["sequential_s"] + r["fleet_s"] for r in results) * 1e6
+    return us, ";".join(
+        f"C{r['n_clients']}:seq={r['sequential_s']}s,"
+        f"fleet={r['fleet_s']}s,x{r['speedup']}" for r in results)
+
+
 def bench_kernel_invariant_stats():
     import jax
     import jax.numpy as jnp
@@ -168,6 +215,7 @@ BENCHES = [
     ("fig6_invariant_evolution", bench_fig6_invariant_evolution),
     ("table3_threshold", bench_table3_threshold),
     ("fig5_scalability", bench_fig5_scalability),
+    ("fleet_scaling", bench_fleet_scaling),
     ("kernel_invariant_stats", bench_kernel_invariant_stats),
     ("kernel_masked_ffn", bench_kernel_masked_ffn),
     ("kernel_decode_gqa", bench_kernel_decode_gqa),

@@ -25,6 +25,37 @@ class ClientUpdate:
     client_id: int = -1
 
 
+@jax.jit
+def aggregate_stacked(global_params, stacked_deltas, weights,
+                      mask_bank, mask_idx):
+    """Fused device-side FedAvg over a stacked cohort (fl/fleet.py).
+
+    stacked_deltas: tree of (C, ...) leaves, already mask-zeroed where a
+    client did not train (so ``mask_c * delta_c == delta_c``).
+    weights: (C,) sample counts. mask_bank: tree of (K, ...) distinct
+    participation masks; mask_idx: (C,) int32 mapping client -> bank row
+    (row of all-ones for full-model clients).
+
+    Same formula as `aggregate` — the numerator collapses to one weighted
+    tree-reduce because the deltas are pre-zeroed, and the denominator
+    factors through the (few) distinct masks:
+        num = sum_c w_c * delta_c
+        den = sum_k (sum_{c: idx_c=k} w_c) * bank_k
+    """
+    weights = weights.astype(jnp.float32)
+    k = jax.tree.leaves(mask_bank)[0].shape[0]
+    w_per_mask = jax.ops.segment_sum(weights, mask_idx, num_segments=k)
+    num = jax.tree.map(
+        lambda d: jnp.tensordot(weights, d.astype(jnp.float32), axes=1),
+        stacked_deltas)
+    den = jax.tree.map(lambda b: jnp.tensordot(w_per_mask, b, axes=1),
+                       mask_bank)
+    return jax.tree.map(
+        lambda p, n, d: p + jnp.where(d > 0, n / jnp.maximum(d, 1e-12),
+                                      0.0).astype(p.dtype),
+        global_params, num, den)
+
+
 def aggregate(global_params, updates: Sequence[ClientUpdate]):
     """Participation-weighted FedAvg."""
     num = jax.tree.map(jnp.zeros_like, global_params)

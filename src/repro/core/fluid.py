@@ -51,12 +51,13 @@ class RoundLog:
 
 class FluidServer:
     def __init__(self, params, unit_specs, clients, cfg: FluidConfig,
-                 eval_fn: Optional[Callable] = None):
+                 eval_fn: Optional[Callable] = None, engine=None):
         self.params = params
         self.unit_specs = unit_specs
         self.clients = list(clients)
         self.cfg = cfg
         self.eval_fn = eval_fn
+        self.engine = engine          # fl.fleet.FleetEngine or None
         self.policy = DropoutPolicy(
             cfg.method if cfg.method != "none" else "ordered",
             unit_specs, seed=cfg.seed)
@@ -85,32 +86,45 @@ class FluidServer:
                        and self.plan is not None
                        and bool(self.plan.stragglers))
 
-        # -------- broadcast + local training
-        updates: List[ClientUpdate] = []
+        # -------- sub-model assignment (shared by both execution backends)
         keep_maps: Dict[int, dict] = {}
         rates_used: Dict[int, float] = {}
-        for c in self.clients:
-            if use_dropout and c.id in self.plan.stragglers:
+        if use_dropout:
+            for cid in self.plan.stragglers:
                 r = (cfg.fixed_rate if cfg.fixed_rate is not None
-                     else self.plan.rates[c.id])
-                keep = self.policy.keep_map(r)
-                keep_maps[c.id] = keep
-                rates_used[c.id] = r
-                sub_params = sub.extract(self.params, self.unit_specs, keep)
-                u = c.train(sub_params, keep_map=keep, rate=r)
-                full_delta, mask = sub.embed_delta(
-                    u.delta, self.params, self.unit_specs, keep)
-                u = ClientUpdate(full_delta, u.n_samples, mask,
-                                 u.sim_time, u.real_time, c.id)
-            else:
-                u = c.train(self.params)
-            updates.append(u)
+                     else self.plan.rates[cid])
+                keep_maps[cid] = self.policy.keep_map(r)
+                rates_used[cid] = r
 
-        actual = {u.client_id: u.sim_time for u in updates}
+        # -------- broadcast + local training
+        prev = self.params
+        cohort = None
+        updates: List[ClientUpdate] = []
+        if self.engine is not None:
+            # one vmapped program for the whole cohort (fl/fleet.py)
+            cohort = self.engine.run_cohort(self.params, keep_maps,
+                                            rates_used)
+            actual = dict(cohort.sim_times)
+        else:
+            for c in self.clients:
+                if c.id in keep_maps:
+                    keep, r = keep_maps[c.id], rates_used[c.id]
+                    sub_params = sub.extract(self.params, self.unit_specs,
+                                             keep)
+                    u = c.train(sub_params, keep_map=keep, rate=r)
+                    full_delta, mask = sub.embed_delta(
+                        u.delta, self.params, self.unit_specs, keep)
+                    u = ClientUpdate(full_delta, u.n_samples, mask,
+                                     u.sim_time, u.real_time, c.id)
+                else:
+                    u = c.train(self.params)
+                updates.append(u)
+            actual = {u.client_id: u.sim_time for u in updates}
+
         # full-model-equivalent latency: a straggler that trained a sub-model
         # of size r would take time/r on the full model (linear model, A.3)
-        latencies = {u.client_id: u.sim_time / rates_used.get(u.client_id, 1.0)
-                     for u in updates}
+        latencies = {cid: t / rates_used.get(cid, 1.0)
+                     for cid, t in actual.items()}
         log.round_time = max(actual.values())
         if self.plan and self.plan.stragglers:
             st = [actual[c] for c in self.plan.stragglers if c in actual]
@@ -120,19 +134,23 @@ class FluidServer:
             log.rates = dict(self.plan.rates)
 
         # -------- aggregate
-        prev = self.params
-        self.params = aggregate(self.params, updates)
+        if cohort is not None:
+            self.params = cohort.aggregate(self.params)
+        else:
+            self.params = aggregate(self.params, updates)
 
         # -------- calibration (server-side; wall-clock measured as overhead)
         t0 = time.perf_counter()
         if self.round % cfg.calibrate_every == 0:
-            non_straggler_updates = [u for u in updates if u.mask is None]
-            per_client = [
-                inv.neuron_stats(prev,
-                                 jax.tree.map(lambda p, d: p + d,
-                                              prev, u.delta),
-                                 self.unit_specs)
-                for u in non_straggler_updates]
+            if cohort is not None:
+                per_client = cohort.non_straggler_stats(prev)
+            else:
+                per_client = [
+                    inv.neuron_stats(prev,
+                                     jax.tree.map(lambda p, d: p + d,
+                                                  prev, u.delta),
+                                     self.unit_specs)
+                    for u in updates if u.mask is None]
             if per_client:
                 if self.th is None:
                     self.th = inv.initial_threshold(per_client)

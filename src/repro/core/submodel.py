@@ -69,20 +69,48 @@ def extract(params, unit_specs, keep_map):
     return sub
 
 
+def keep_mask(full_like, unit_specs, keep_map):
+    """Dense 0/1 participation mask in full-model coordinates.
+
+    1.0 exactly where a straggler with this keep_map trains: the kept
+    rows/cols of every array a group touches, and every array no group
+    touches (transferred whole, fully trained). This is the dense-mask dual
+    of extract(): forward(mask * params) == forward(extract(params)) on the
+    kept coordinates, which is what lets every dropout rate share one
+    compiled program (see fl/fleet.py)."""
+    mask = jax.tree.map(lambda x: jnp.ones_like(x, dtype=jnp.float32),
+                        full_like)
+    for path, axes in _axis_indices(unit_specs, keep_map).items():
+        target = _get(full_like, path)
+        idxs = [np.arange(n) for n in target.shape]
+        for axis, idx in axes.items():
+            idxs[axis] = np.asarray(idx)
+        grid = jnp.ix_(*[jnp.asarray(i) for i in idxs])
+        m = jnp.zeros(target.shape, jnp.float32)
+        _set(mask, path, m.at[grid].set(1.0))
+    return mask
+
+
+def apply_mask(params, mask):
+    """Zero the dropped coordinates — the dense-mask analogue of extract()."""
+    return jax.tree.map(lambda p, m: p * m.astype(p.dtype), params, mask)
+
+
 def embed_delta(sub_delta, full_like, unit_specs, keep_map):
     """Scatter sub-model delta into full coordinates.
 
     Returns (full_delta, mask) — mask has 1.0 exactly where the straggler
-    trained. Arrays untouched by any group (same shape in the sub-model,
-    fully trained by the straggler) pass through verbatim with mask=1."""
+    trained (== keep_mask for this keep_map, built here from the same index
+    grids as the delta scatter to avoid a second _axis_indices pass).
+    Arrays untouched by any group (same shape in the sub-model, fully
+    trained by the straggler) pass through verbatim with mask=1."""
     full_delta = jax.tree.map(
         lambda s, f: (s.astype(f.dtype) if s.shape == f.shape
                       else jnp.zeros_like(f)),
         sub_delta, full_like)
     mask = jax.tree.map(lambda x: jnp.ones_like(x, dtype=jnp.float32),
                         full_like)
-    axis_idx = _axis_indices(unit_specs, keep_map)
-    for path, axes in axis_idx.items():
+    for path, axes in _axis_indices(unit_specs, keep_map).items():
         target = _get(full_like, path)
         idxs = [np.arange(n) for n in target.shape]
         for axis, idx in axes.items():

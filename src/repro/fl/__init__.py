@@ -1,2 +1,3 @@
-from repro.fl.client import SimClient
+from repro.fl.client import FleetClient, SimClient
+from repro.fl.fleet import CohortResult, FleetEngine
 from repro.fl.simulation import build_simulation, run_experiment

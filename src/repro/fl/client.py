@@ -6,6 +6,16 @@ size r, with multiplicative noise, plus a communication term proportional to
 the transferred parameter count. Local training itself is real JAX SGD — the
 deltas are genuine; only wall-clock is modeled (DESIGN.md §7.1). A client's
 speed can be changed mid-run to emulate runtime variation (paper Fig. 4b).
+
+Two execution paths share the same data/speed model:
+  * SimClient.train — the sequential reference: one jit call per client,
+    stragglers get a physically extracted sub-model (core/submodel.extract).
+  * FleetClient — the batched path: exposes the epoch batch order and the
+    time model so fl/fleet.py can run a whole cohort as one vmapped
+    program. Both consume the per-client RNG in the same order
+    (local_epochs permutations, then one noise draw), so a fleet round is
+    bit-identical to the sequential round in everything but float summation
+    order.
 """
 from __future__ import annotations
 
@@ -21,14 +31,36 @@ from repro.core.aggregate import ClientUpdate
 _JIT_CACHE: Dict[str, callable] = {}
 
 
+def make_loss(model_cls):
+    """Mean softmax cross-entropy — shared by the sequential and fleet paths."""
+    def loss(params, xb, yb):
+        logits = model_cls.apply(params, xb)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - gold)
+    return loss
+
+
+def make_weighted_loss(model_cls):
+    """Sample-weighted mean cross-entropy (fl/fleet.py batch padding).
+
+    With weights 1 on a client's real samples and 0 on padding, this equals
+    the client's own `mean` loss exactly, so cohorts whose shards are
+    smaller than the global batch size still match the sequential path. An
+    all-zero weight row (a padded *step*) yields a constant 0 loss, hence a
+    zero gradient — a no-op SGD step."""
+    def loss(params, xb, yb, wb):
+        logits = model_cls.apply(params, xb)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
+        return jnp.sum(wb * (lse - gold)) / jnp.maximum(wb.sum(), 1.0)
+    return loss
+
+
 def _train_fn(model_cls):
     key = model_cls.__name__
     if key not in _JIT_CACHE:
-        def loss(params, xb, yb):
-            logits = model_cls.apply(params, xb)
-            lse = jax.nn.logsumexp(logits, axis=-1)
-            gold = jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
-            return jnp.mean(lse - gold)
+        loss = make_loss(model_cls)
 
         @jax.jit
         def run(params, xs, ys, lr):
@@ -65,29 +97,69 @@ class SimClient:
     def n_samples(self) -> int:
         return len(self.y)
 
+    @property
+    def eff_batch_size(self) -> int:
+        return min(self.batch_size, self.n_samples)
+
+    # ------------------------------------------------------------ speed model
+    def _epoch_order(self) -> np.ndarray:
+        """One epoch's minibatch sample order (consumes one RNG draw)."""
+        bs = self.eff_batch_size
+        nb = self.n_samples // bs
+        return self._rng.permutation(self.n_samples)[:nb * bs]
+
+    def _sim_time(self, rate: float, n_params: int) -> float:
+        """End-to-end emulated seconds (consumes one RNG draw): linear in
+        sub-model size + transfer term (paper App. A.3)."""
+        sim = (self.speed * self.local_epochs * rate
+               * (1.0 + self.noise * self._rng.randn()))
+        sim += 2 * self.comm_s_per_mparam * n_params / 1e6
+        return max(sim, 1e-6)
+
+    # ------------------------------------------------------------------ train
     def train(self, params, keep_map=None, rate: float = 1.0) -> ClientUpdate:
         import time
         t0 = time.perf_counter()
         run = _train_fn(self.model_cls)
-        bs = min(self.batch_size, self.n_samples)
+        bs = self.eff_batch_size
         nb = self.n_samples // bs
         new_params = params
         for _ in range(self.local_epochs):
-            order = self._rng.permutation(self.n_samples)[:nb * bs]
+            order = self._epoch_order()
             xs = jnp.asarray(self.x[order].reshape(nb, bs, *self.x.shape[1:]))
             ys = jnp.asarray(self.y[order].reshape(nb, bs))
             new_params = run(new_params, xs, ys, self.lr)
         delta = jax.tree.map(lambda a, b: a - b, new_params, params)
         real = time.perf_counter() - t0
-        sim = (self.speed * self.local_epochs * rate
-               * (1.0 + self.noise * self._rng.randn()))
         n_par = sum(x.size for x in jax.tree.leaves(params))
-        sim += 2 * self.comm_s_per_mparam * n_par / 1e6
-        return ClientUpdate(delta, self.n_samples, None, max(sim, 1e-6),
-                            real, self.id)
+        sim = self._sim_time(rate, n_par)
+        return ClientUpdate(delta, self.n_samples, None, sim, real, self.id)
 
     def evaluate(self, params, x=None, y=None):
         x = self.x if x is None else x
         y = self.y if y is None else y
         logits = self.model_cls.apply(params, jnp.asarray(x))
         return float((jnp.argmax(logits, -1) == jnp.asarray(y)).mean())
+
+
+@dataclass
+class FleetClient(SimClient):
+    """Batched-path client: same shard, speed model, and RNG stream as
+    SimClient, but training happens inside fl/fleet.py's single vmapped
+    cohort program instead of a per-client `train` call."""
+
+    def local_batches(self):
+        """(xs, ys) for one round: (local_epochs * nb, bs, ...) numpy arrays,
+        consuming the RNG exactly like sequential train()."""
+        bs = self.eff_batch_size
+        nb = self.n_samples // bs
+        orders = np.concatenate([self._epoch_order()
+                                 for _ in range(self.local_epochs)])
+        xs = self.x[orders].reshape(self.local_epochs * nb, bs,
+                                    *self.x.shape[1:])
+        ys = self.y[orders].reshape(self.local_epochs * nb, bs)
+        return xs, ys
+
+    def draw_sim_time(self, rate: float, n_params: int) -> float:
+        """The post-training noise draw, in SimClient.train's RNG order."""
+        return self._sim_time(rate, n_params)

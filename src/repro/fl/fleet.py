@@ -1,0 +1,255 @@
+"""Vectorized client-fleet execution engine.
+
+The sequential reference path (`FluidServer` + `SimClient.train`) dispatches
+one jit call per client and gives every straggler a physically smaller
+sub-model — so each new dropout rate means a new set of array shapes and a
+recompile, and round time scales with the Python loop, not the hardware.
+
+This engine runs the *entire cohort* as one compiled program:
+
+  * Sub-models become dense keep-masks (core/submodel.keep_mask) applied
+    inside the batched train step — the masking idiom of
+    kernels/masked_ffn.py lifted to whole param trees. forward(mask*params)
+    equals forward(extract(params)) on the kept coordinates because every
+    consumer weight of a dropped neuron is zeroed, so full-model clients and
+    every dropout rate share ONE compiled shape; the mask is data, not
+    shape.
+  * Local SGD for all C clients is jax.vmap over a jax.lax.scan of
+    minibatches. Shards of different sizes pad to the cohort-max step count
+    and batch size; padding is neutralized by per-sample loss weights.
+  * Gradients are mask-projected each step, so deltas come back already
+    mask-zeroed in full coordinates — exactly what embed_delta() would have
+    produced — and aggregation collapses to one fused device-side
+    tree-reduce (core/aggregate.aggregate_stacked) instead of per-update
+    Python arithmetic.
+  * Masks are deduplicated into a (K, ...) bank (all-ones row 0 + one row
+    per straggler keep-map) indexed per client, so mask memory scales with
+    the number of *distinct* sub-models, not the fleet size.
+
+Numerical contract (tests/test_fleet.py): with the same seeds, a fleet
+round reproduces the sequential round's deltas, sim-times, and aggregated
+params up to float summation order.
+"""
+from __future__ import annotations
+
+import functools
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import invariant as inv
+from repro.core import submodel as sub
+from repro.core.aggregate import ClientUpdate, aggregate_stacked
+from repro.fl.client import FleetClient, make_weighted_loss
+
+_COHORT_CACHE: Dict[str, callable] = {}
+
+# lax.scan under vmap is pathological on CPU for batched-weight train steps
+# (measured ~6x slower than the identical unrolled program: the loop body
+# blocks cross-step fusion and re-materializes the (C, ...) carry). Small
+# step counts unroll fully in Python; longer ones use scan's unroll knob.
+_FULL_UNROLL_STEPS = 16
+_SCAN_UNROLL = 8
+
+
+def _cohort_fn(model_cls):
+    """One compiled program: vmapped masked local SGD for a whole cohort."""
+    key = model_cls.__name__
+    if key not in _COHORT_CACHE:
+        loss = make_weighted_loss(model_cls)
+
+        @functools.partial(jax.jit, static_argnames=("n_steps",))
+        def run(params, mask_bank, mask_idx, xs, ys, sw, lr, n_steps):
+            """params: full tree (broadcast); mask_bank: (K, ...) leaves;
+            mask_idx: (C,); xs: (C, S, bs, ...); ys: (C, S, bs);
+            sw: (C, S, bs) per-sample weights — 1.0 on real samples, 0.0 on
+            batch/step padding (an all-zero step is a no-op).
+            Returns mask-zeroed full-coordinate deltas, (C, ...) leaves."""
+            def one_client(mi, x, y, v):
+                m = jax.tree.map(lambda b: b[mi], mask_bank)
+                w0 = sub.apply_mask(params, m)
+
+                def step(w, batch):
+                    xb, yb, vb = batch
+                    g = jax.grad(loss)(w, xb, yb, vb)
+                    return jax.tree.map(
+                        lambda a, ga, ma: a - lr * ma * ga,
+                        w, g, m), 0
+                if n_steps <= _FULL_UNROLL_STEPS:
+                    w = w0
+                    for s in range(n_steps):
+                        w, _ = step(w, (x[s], y[s], v[s]))
+                else:
+                    w, _ = jax.lax.scan(step, w0, (x, y, v),
+                                        unroll=_SCAN_UNROLL)
+                # every update step carried the mask factor => pre-zeroed
+                return jax.tree.map(lambda a, b: a - b, w, w0)
+            return jax.vmap(one_client)(mask_idx, xs, ys, sw)
+        _COHORT_CACHE[key] = run
+    return _COHORT_CACHE[key]
+
+
+@dataclass
+class CohortResult:
+    """Stacked outputs of one fleet round + lazy per-client views."""
+    engine: "FleetEngine"
+    deltas: dict                    # tree of (C, ...) leaves, mask-zeroed
+    weights: jnp.ndarray            # (C,) sample counts
+    mask_bank: dict                 # tree of (K, ...) leaves
+    mask_idx: jnp.ndarray           # (C,) int32
+    client_ids: List[int]
+    sim_times: Dict[int, float]
+    straggler_ids: frozenset
+
+    def aggregate(self, global_params):
+        """Fused device-side masked FedAvg (== core.aggregate.aggregate)."""
+        return aggregate_stacked(global_params, self.deltas, self.weights,
+                                 self.mask_bank, self.mask_idx)
+
+    def non_straggler_stats(self, prev_params) -> List[Dict[str, np.ndarray]]:
+        """Per-client invariant-neuron stats, computed batched on device."""
+        sel = np.array([i for i, cid in enumerate(self.client_ids)
+                        if cid not in self.straggler_ids], dtype=np.int32)
+        if sel.size == 0:
+            return []
+        picked = jax.tree.map(lambda d: d[sel], self.deltas)
+        stacked = self.engine._stats_fn(prev_params, picked)
+        return [{g: np.asarray(v[i]) for g, v in stacked.items()}
+                for i in range(sel.size)]
+
+    def updates(self) -> List[ClientUpdate]:
+        """Materialize sequential-style ClientUpdates (tests / inspection)."""
+        out = []
+        for i, cid in enumerate(self.client_ids):
+            delta = jax.tree.map(lambda d: d[i], self.deltas)
+            mask = None
+            if cid in self.straggler_ids:
+                row = int(self.mask_idx[i])
+                mask = jax.tree.map(lambda b: b[row], self.mask_bank)
+            out.append(ClientUpdate(delta, int(self.weights[i]), mask,
+                                    self.sim_times[cid], 0.0, cid))
+        return out
+
+
+class FleetEngine:
+    """Runs a homogeneous-model client fleet as single vmapped programs."""
+
+    def __init__(self, model_cls, clients: Sequence[FleetClient], unit_specs):
+        self.model_cls = model_cls
+        self.clients = list(clients)
+        self.unit_specs = unit_specs
+        if not self.clients:
+            raise ValueError("FleetEngine needs at least one client")
+        for attr in ("lr", "local_epochs"):
+            vals = {getattr(c, attr) for c in self.clients}
+            if len(vals) > 1:
+                raise ValueError(
+                    f"fleet backend needs a uniform client {attr}, got {vals}"
+                    " — use backend='sequential' for heterogeneous cohorts")
+        c0 = self.clients[0]
+        # batch dim pads to the cohort max; smaller shards get sample weights
+        self.bs = max(c.eff_batch_size for c in self.clients)
+        self.epochs = c0.local_epochs
+        self.lr = c0.lr
+        self.steps = max(
+            self.epochs * (c.n_samples // c.eff_batch_size)
+            for c in self.clients)
+        self._run = _cohort_fn(model_cls)
+        self._ones_mask: Optional[dict] = None
+        self._stats_jit = None
+        self._bank_cache = None        # (fingerprint, bank, idx, n_by_row)
+
+    # ------------------------------------------------------------- internals
+    def _stats_fn(self, prev, stacked_deltas):
+        if self._stats_jit is None:
+            specs = self.unit_specs
+
+            def one(prev_p, d):
+                new = jax.tree.map(lambda a, b: a + b, prev_p, d)
+                return inv.neuron_stats(prev_p, new, specs)
+            self._stats_jit = jax.jit(
+                lambda p, ds: jax.vmap(lambda d: one(p, d))(ds))
+        return self._stats_jit(prev, stacked_deltas)
+
+    def _stacked_data(self):
+        """(xs, ys, sw): per-client epoch batches padded to (steps, bs);
+        sw is 1.0 on real samples, 0.0 on batch/step padding. Consumes each
+        client's RNG exactly like SimClient.train.
+
+        Rebuilt host-side every round (only the permutations change); at
+        paper scales this is <2% of the cohort program's runtime. If fleets
+        outgrow that, stage shards on device once and gather by permutation
+        indices instead."""
+        C = len(self.clients)
+        feat = self.clients[0].x.shape[1:]
+        xs = np.zeros((C, self.steps, self.bs, *feat),
+                      self.clients[0].x.dtype)
+        ys = np.zeros((C, self.steps, self.bs), np.int32)
+        sw = np.zeros((C, self.steps, self.bs), np.float32)
+        for i, c in enumerate(self.clients):
+            x, y = c.local_batches()
+            s, b = x.shape[0], x.shape[1]
+            xs[i, :s, :b] = x
+            ys[i, :s, :b] = y
+            sw[i, :s, :b] = 1.0
+        return jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(sw)
+
+    def _mask_bank(self, params, keep_maps: Dict[int, dict]):
+        """(bank, idx, n_params_by_row): all-ones row 0 + one row per
+        straggler keep-map; idx maps client position -> bank row. Cached
+        across rounds while the keep-maps are unchanged (they only move on
+        calibration steps)."""
+        km_fp = {cid: tuple((g, kept.tobytes())
+                            for g, kept in sorted(km.items()))
+                 for cid, km in keep_maps.items()}
+        fp = tuple(sorted(km_fp.items()))
+        if self._bank_cache is not None and self._bank_cache[0] == fp:
+            return self._bank_cache[1:]
+        if self._ones_mask is None:
+            self._ones_mask = jax.tree.map(
+                lambda p: jnp.ones(p.shape, jnp.float32), params)
+        rows = [self._ones_mask]
+        row_of = {}                 # client id -> bank row
+        row_of_fp = {}              # distinct keep-map content -> bank row
+        for cid in sorted(keep_maps):
+            if km_fp[cid] not in row_of_fp:
+                row_of_fp[km_fp[cid]] = len(rows)
+                rows.append(sub.keep_mask(params, self.unit_specs,
+                                          keep_maps[cid]))
+            row_of[cid] = row_of_fp[km_fp[cid]]
+        bank = jax.tree.map(lambda *ls: jnp.stack(ls), *rows)
+        idx = jnp.asarray([row_of.get(c.id, 0) for c in self.clients],
+                          jnp.int32)
+        # exact integer param counts per row (per-leaf int32 sums of a 0/1
+        # mask cannot overflow; accumulate in host int64 across leaves)
+        n_by_row = sum(
+            np.asarray(b.sum(axis=tuple(range(1, b.ndim)),
+                             dtype=jnp.int32)).astype(np.int64)
+            for b in jax.tree.leaves(bank))
+        self._bank_cache = (fp, bank, idx, n_by_row)
+        return bank, idx, n_by_row
+
+    # ------------------------------------------------------------------- API
+    def run_cohort(self, params, keep_maps: Dict[int, dict],
+                   rates: Optional[Dict[int, float]] = None) -> CohortResult:
+        """One FL round for the whole fleet: keep_maps/rates per straggler
+        client id (absent => full model)."""
+        rates = rates or {}
+        xs, ys, sw = self._stacked_data()
+        bank, idx, n_by_row = self._mask_bank(params, keep_maps)
+        deltas = self._run(params, bank, idx, xs, ys, sw, self.lr,
+                           self.steps)
+        idx_host = np.asarray(idx)
+        sim_times = {
+            c.id: c.draw_sim_time(rates.get(c.id, 1.0),
+                                  int(n_by_row[idx_host[i]]))
+            for i, c in enumerate(self.clients)}
+        weights = jnp.asarray([c.n_samples for c in self.clients],
+                              jnp.float32)
+        return CohortResult(self, deltas, weights, bank, idx,
+                            [c.id for c in self.clients], sim_times,
+                            frozenset(keep_maps))

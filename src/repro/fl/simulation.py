@@ -16,8 +16,11 @@ import numpy as np
 from repro.core.fluid import FluidConfig, FluidServer
 from repro.data.partition import partition_non_iid
 from repro.data.synthetic import make_dataset
-from repro.fl.client import SimClient
+from repro.fl.client import FleetClient, SimClient
+from repro.fl.fleet import FleetEngine
 from repro.models.small import MODELS
+
+BACKENDS = ("sequential", "fleet")
 
 WORKLOADS = {
     "femnist": ("femnist", "femnist_cnn", 0.004, 10),
@@ -32,6 +35,7 @@ class Simulation:
     clients: List[SimClient]
     model_cls: type
     ds: object
+    backend: str = "sequential"
 
     def set_speed(self, client_id: int, speed: float):
         """Emulate runtime condition changes (paper Fig. 4b)."""
@@ -61,8 +65,10 @@ def build_simulation(workload: str, n_clients: int = 5,
                      straggler_frac: Optional[float] = None,
                      slow_factor: float = 1.3,
                      n_data: int = 2000, local_epochs: int = 1,
-                     seed: int = 0, speeds: Optional[Dict] = None
-                     ) -> Simulation:
+                     seed: int = 0, speeds: Optional[Dict] = None,
+                     backend: str = "sequential") -> Simulation:
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
     ds_name, model_name, lr, bs = WORKLOADS[workload]
     model_cls = MODELS[model_name]
     ds = make_dataset(ds_name, n=n_data, n_test=max(400, n_data // 5),
@@ -71,9 +77,10 @@ def build_simulation(workload: str, n_clients: int = 5,
     if speeds is None:
         speeds = default_speeds(n_clients, straggler_ids,
                                 slow_factor=slow_factor, seed=seed)
-    clients = [SimClient(i, model_cls, ds.x[parts[i]], ds.y[parts[i]],
-                         speed=speeds[i], batch_size=bs, lr=lr,
-                         local_epochs=local_epochs, seed=seed)
+    client_cls = FleetClient if backend == "fleet" else SimClient
+    clients = [client_cls(i, model_cls, ds.x[parts[i]], ds.y[parts[i]],
+                          speed=speeds[i], batch_size=bs, lr=lr,
+                          local_epochs=local_epochs, seed=seed)
                for i in range(n_clients)]
     params = model_cls.init(jax.random.PRNGKey(seed))
 
@@ -85,9 +92,11 @@ def build_simulation(workload: str, n_clients: int = 5,
 
     cfg = FluidConfig(method=method, fixed_rate=fixed_rate,
                       straggler_frac=straggler_frac, seed=seed)
+    engine = (FleetEngine(model_cls, clients, model_cls.UNIT_SPECS)
+              if backend == "fleet" else None)
     server = FluidServer(params, model_cls.UNIT_SPECS, clients, cfg,
-                         eval_fn=eval_fn)
-    return Simulation(server, clients, model_cls, ds)
+                         eval_fn=eval_fn, engine=engine)
+    return Simulation(server, clients, model_cls, ds, backend)
 
 
 def run_experiment(workload: str, rounds: int, **kw):

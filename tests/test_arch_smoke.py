@@ -10,6 +10,8 @@ from repro.launch.steps import make_train_step
 from repro.models import model as M
 from repro.optim import make_optimizer
 
+pytestmark = pytest.mark.slow    # multi-minute: tier-1 only, not the CI fast tier
+
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_smoke_forward_train_decode(arch):

@@ -1,0 +1,193 @@
+"""Vectorized fleet engine == sequential reference path (fl/fleet.py).
+
+The acceptance contract: with the same seeds, one vmapped cohort round
+reproduces the per-client sequential round — deltas (full-model AND
+masked-straggler clients), emulated times, and the aggregated params — up
+to float summation order; and the fused device-side aggregation matches
+core.aggregate.aggregate.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import submodel as sub
+from repro.core.aggregate import ClientUpdate, aggregate, aggregate_stacked
+from repro.core.dropout import DropoutPolicy
+from repro.fl.client import FleetClient, SimClient
+from repro.fl.fleet import FleetEngine
+from repro.fl.simulation import build_simulation
+
+
+def _tree_close(a, b, atol, rtol=1e-5):
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(
+        np.asarray(x), np.asarray(y), atol=atol, rtol=rtol), a, b)
+
+
+@pytest.fixture(scope="module")
+def fleet_sim():
+    return build_simulation("femnist", n_clients=4, straggler_ids=(0,),
+                            method="invariant", n_data=240, seed=0,
+                            backend="fleet")
+
+
+def _clone_seq_client(c, model_cls):
+    return SimClient(c.id, model_cls, c.x, c.y, speed=c.speed,
+                     batch_size=c.batch_size, local_epochs=c.local_epochs,
+                     lr=c.lr, seed=c.seed)
+
+
+def test_full_cohort_deltas_match_sequential(fleet_sim):
+    engine = fleet_sim.server.engine
+    params = fleet_sim.server.params
+    seq = [_clone_seq_client(c, fleet_sim.model_cls)
+           for c in engine.clients]
+    # fresh fleet clients so both paths draw the same RNG stream
+    flt = [FleetClient(c.id, fleet_sim.model_cls, c.x, c.y, speed=c.speed,
+                       batch_size=c.batch_size, local_epochs=c.local_epochs,
+                       lr=c.lr, seed=c.seed) for c in engine.clients]
+    eng = FleetEngine(fleet_sim.model_cls, flt, engine.unit_specs)
+    cohort = eng.run_cohort(params, {})
+    updates = cohort.updates()
+    for c, u in zip(seq, updates):
+        ref = c.train(params)
+        assert u.client_id == ref.client_id
+        assert u.sim_time == pytest.approx(ref.sim_time, rel=1e-12)
+        _tree_close(u.delta, ref.delta, atol=2e-5)
+
+
+def test_masked_straggler_delta_matches_extracted_submodel(fleet_sim):
+    engine = fleet_sim.server.engine
+    params = fleet_sim.server.params
+    policy = DropoutPolicy("ordered", engine.unit_specs, seed=0)
+    keep = policy.keep_map(0.5)
+    c0 = engine.clients[0]
+    seq = _clone_seq_client(c0, fleet_sim.model_cls)
+    flt = [FleetClient(c.id, fleet_sim.model_cls, c.x, c.y, speed=c.speed,
+                       batch_size=c.batch_size, local_epochs=c.local_epochs,
+                       lr=c.lr, seed=c.seed) for c in engine.clients]
+    eng = FleetEngine(fleet_sim.model_cls, flt, engine.unit_specs)
+    cohort = eng.run_cohort(params, {0: keep}, {0: 0.5})
+    u = cohort.updates()[0]
+    # sequential reference: physically extracted sub-model + re-embedding
+    sub_params = sub.extract(params, engine.unit_specs, keep)
+    ref = seq.train(sub_params, keep_map=keep, rate=0.5)
+    full_delta, mask = sub.embed_delta(ref.delta, params,
+                                       engine.unit_specs, keep)
+    assert u.sim_time == pytest.approx(ref.sim_time, rel=1e-12)
+    _tree_close(u.mask, mask, atol=0)
+    _tree_close(u.delta, full_delta, atol=2e-5)
+    # fleet deltas come back already mask-zeroed
+    jax.tree.map(lambda d, m: np.testing.assert_array_equal(
+        np.asarray(d) * (1 - np.asarray(m)), 0.0), u.delta, u.mask)
+
+
+def test_device_aggregation_matches_reference(fleet_sim):
+    engine = fleet_sim.server.engine
+    params = fleet_sim.server.params
+    policy = DropoutPolicy("ordered", engine.unit_specs, seed=0)
+    keep = policy.keep_map(0.65)
+    cohort = engine.run_cohort(params, {1: keep}, {1: 0.65})
+    got = cohort.aggregate(params)
+    want = aggregate(params, cohort.updates())
+    _tree_close(got, want, atol=1e-5)
+
+
+def test_aggregate_stacked_pure_tree():
+    """aggregate_stacked == aggregate on a hand-built masked cohort."""
+    rng = np.random.RandomState(0)
+    p = {"a": jnp.asarray(rng.randn(4, 3).astype(np.float32)),
+         "b": jnp.asarray(rng.randn(5).astype(np.float32))}
+    mask = {"a": jnp.asarray((rng.rand(4, 3) > 0.5).astype(np.float32)),
+            "b": jnp.asarray((rng.rand(5) > 0.5).astype(np.float32))}
+    ones = jax.tree.map(lambda x: jnp.ones_like(x), p)
+    deltas = [jax.tree.map(lambda x: jnp.asarray(
+        rng.randn(*x.shape).astype(np.float32)), p) for _ in range(3)]
+    deltas[2] = jax.tree.map(lambda d, m: d * m, deltas[2], mask)
+    weights = [2.0, 5.0, 3.0]
+    updates = [ClientUpdate(deltas[0], 2, None, client_id=0),
+               ClientUpdate(deltas[1], 5, None, client_id=1),
+               ClientUpdate(deltas[2], 3, mask, client_id=2)]
+    want = aggregate(p, updates)
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *deltas)
+    bank = jax.tree.map(lambda a, b: jnp.stack([a, b]), ones, mask)
+    got = aggregate_stacked(p, stacked, jnp.asarray(weights),
+                            bank, jnp.asarray([0, 0, 1], jnp.int32))
+    _tree_close(got, want, atol=1e-6)
+
+
+def test_mask_bank_dedupes_identical_keep_maps(fleet_sim):
+    """Two stragglers with the same keep-map share one bank row: K = 2
+    (ones + 1 distinct), not 1 + n_stragglers."""
+    engine = fleet_sim.server.engine
+    params = fleet_sim.server.params
+    policy = DropoutPolicy("ordered", engine.unit_specs, seed=0)
+    keep = policy.keep_map(0.5)
+    keep2 = {g: v.copy() for g, v in keep.items()}
+    cohort = engine.run_cohort(params, {0: keep, 1: keep2},
+                               {0: 0.5, 1: 0.5})
+    assert jax.tree.leaves(cohort.mask_bank)[0].shape[0] == 2
+    assert int(cohort.mask_idx[0]) == 1 and int(cohort.mask_idx[1]) == 1
+
+
+def test_keep_mask_matches_embed_delta_mask(fleet_sim):
+    engine = fleet_sim.server.engine
+    params = fleet_sim.server.params
+    policy = DropoutPolicy("random", engine.unit_specs, seed=3)
+    keep = policy.keep_map(0.75)
+    m = sub.keep_mask(params, engine.unit_specs, keep)
+    zero_sub = jax.tree.map(jnp.zeros_like,
+                            sub.extract(params, engine.unit_specs, keep))
+    _, m_ref = sub.embed_delta(zero_sub, params, engine.unit_specs, keep)
+    _tree_close(m, m_ref, atol=0)
+    n_sub, _ = sub.submodel_sizes(params, engine.unit_specs, keep)
+    total = sum(float(x.sum()) for x in jax.tree.leaves(m))
+    assert int(total) == n_sub
+
+
+def test_end_to_end_fleet_matches_sequential_rounds(fleet_sim):
+    kw = dict(workload="femnist", n_clients=4, straggler_ids=(0,),
+              method="invariant", n_data=240, seed=0)
+    seq = build_simulation(backend="sequential", **kw)
+    flt = build_simulation(backend="fleet", **kw)
+    hs = seq.server.run(3)
+    hf = flt.server.run(3)
+    for a, b in zip(hs, hf):
+        assert a.round_time == pytest.approx(b.round_time, rel=1e-9)
+        assert a.stragglers == b.stragglers
+        assert a.rates == b.rates
+    _tree_close(seq.server.params, flt.server.params, atol=5e-4)
+
+
+def test_heterogeneous_lr_rejected():
+    x = np.zeros((40, 2), np.float32)
+    y = np.zeros((40,), np.int64)
+
+    class Tiny:
+        pass
+    a = FleetClient(0, Tiny, x, y, speed=1.0, lr=0.01)
+    b = FleetClient(1, Tiny, x, y, speed=1.0, lr=0.02)
+    with pytest.raises(ValueError, match="uniform"):
+        FleetEngine(Tiny, [a, b], [])
+
+
+def test_ragged_shards_match_sequential(fleet_sim):
+    """Clients whose shards are smaller than the batch size (and of unequal
+    step counts) still reproduce the sequential path via batch padding +
+    per-sample loss weights."""
+    model_cls = fleet_sim.model_cls
+    src = fleet_sim.server.engine.clients
+    sizes = [7, 23, 40]     # all below/above the batch size of 10
+    seq, flt = [], []
+    for cid, n in enumerate(sizes):
+        c = src[0]
+        kw = dict(speed=1.0, batch_size=10, lr=c.lr, seed=5)
+        seq.append(SimClient(cid, model_cls, c.x[:n], c.y[:n], **kw))
+        flt.append(FleetClient(cid, model_cls, c.x[:n], c.y[:n], **kw))
+    params = fleet_sim.server.params
+    eng = FleetEngine(model_cls, flt, fleet_sim.server.engine.unit_specs)
+    cohort = eng.run_cohort(params, {})
+    for c, u in zip(seq, cohort.updates()):
+        ref = c.train(params)
+        assert u.sim_time == pytest.approx(ref.sim_time, rel=1e-12)
+        _tree_close(u.delta, ref.delta, atol=2e-5)

@@ -4,6 +4,8 @@ import pytest
 
 from repro.fl.simulation import build_simulation
 
+pytestmark = pytest.mark.slow    # multi-minute: tier-1 only, not the CI fast tier
+
 
 @pytest.fixture(scope="module")
 def sim_hist():
