@@ -1,0 +1,121 @@
+"""Serving benchmark: engine decode throughput vs the Python-loop baseline.
+
+Measures decode tok/s for {batch 1, 8, 32} x {dense, r=0.5, mixed-rate}
+through launch/serving.ServeEngine (one jitted lax.scan chunk per dispatch,
+masks as data) and, at each batch size, the synchronous Python-loop decoder
+from launch/serve.serve (one jit dispatch per token, dense only). Writes
+BENCH_serve.json at the repo root.
+
+Apples-to-apples: both paths run the same smoke config, greedy argmax, same
+prompt/gen lengths; engine runs are uniform-length requests so the slot
+batch stays full (the continuous-batching ragged case is exercised by
+tests/test_serving.py, not timed here).
+
+``--smoke`` runs one tiny mixed-rate batch and asserts non-zero throughput
+plus single-trace decode — the CI serve gate.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+import jax
+
+
+def _engine_run(cfg, batch, rates, prompt_len, gen_len, seed=0):
+    """Returns (tok_per_s, summary) for 2*batch uniform-length requests."""
+    from repro.launch.serving import ServeEngine, ServeRequest, rate_masks
+    from repro.models import model as model_lib
+    params = model_lib.init_params(cfg, jax.random.PRNGKey(seed))
+    eng = ServeEngine(cfg, params, batch_size=batch,
+                      max_prompt_len=prompt_len, max_gen_len=gen_len,
+                      chunk=min(8, gen_len))
+    mask_of = {r: (None if r >= 1.0 else rate_masks(cfg, r, seed=seed))
+               for r in rates}
+    rng = np.random.RandomState(seed)
+
+    def submit_wave():
+        for i in range(2 * batch):
+            toks = rng.randint(0, min(cfg.vocab_size, 256), (prompt_len,),
+                               dtype=np.int32)
+            eng.submit(ServeRequest(toks, gen_len=gen_len,
+                                    masks=mask_of[rates[i % len(rates)]]))
+
+    submit_wave()        # warmup wave: compiles prefill/insert/decode
+    eng.run()
+    for k in eng.stats:
+        eng.stats[k] = 0 if isinstance(eng.stats[k], int) else 0.0
+    submit_wave()        # timed wave
+    eng.run()
+    s = eng.summary()
+    return s["tok_per_s"], s
+
+
+def _baseline_run(cfg, batch, prompt_len, gen_len, seed=0):
+    """Python-loop decode tok/s (dense; one dispatch per token)."""
+    from repro.launch.serve import serve
+    serve(cfg, batch, prompt_len, gen_len, seed=seed)          # warmup
+    _, stats = serve(cfg, batch, prompt_len, gen_len, seed=seed)
+    return stats["tok_per_s"]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-12b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run + assertions (CI gate), no JSON")
+    ap.add_argument("--batches", default="1,8,32")
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    from repro.configs import get_config
+    cfg = get_config(args.arch).smoke()
+
+    if args.smoke:
+        tps, s = _engine_run(cfg, batch=2, rates=(1.0, 0.5, 0.25),
+                             prompt_len=8, gen_len=8)
+        assert tps > 0, f"no decode throughput: {s}"
+        assert s["trace_counts"]["decode"] == 1, \
+            f"decode retraced: {s['trace_counts']}"
+        print(f"serve smoke OK: {tps:.1f} tok/s, "
+              f"trace_counts={s['trace_counts']}")
+        return
+
+    mixes = {"dense": (1.0,), "r0.5": (0.5,),
+             "mixed": (1.0, 0.5, 0.25)}
+    results = []
+    for batch in (int(b) for b in args.batches.split(",")):
+        row = {"batch": batch}
+        for name, rates in mixes.items():
+            tps, s = _engine_run(cfg, batch, rates, args.prompt_len,
+                                 args.gen_len)
+            row[f"engine_{name}_tok_s"] = round(tps, 1)
+            row["trace_counts"] = s["trace_counts"]
+        row["baseline_loop_tok_s"] = round(
+            _baseline_run(cfg, batch, args.prompt_len, args.gen_len), 1)
+        row["speedup_vs_loop"] = round(
+            row["engine_dense_tok_s"] / max(row["baseline_loop_tok_s"],
+                                            1e-9), 2)
+        print(row)
+        results.append(row)
+
+    out = {"bench": "serve_engine", "arch": args.arch, "config": "smoke",
+           "prompt_len": args.prompt_len, "gen_len": args.gen_len,
+           "jax": jax.__version__, "device": jax.devices()[0].platform,
+           "results": results}
+    path = args.out or os.path.join(os.path.dirname(__file__), "..",
+                                    "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+        f.write("\n")
+    print(f"wrote {os.path.abspath(path)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -7,15 +7,17 @@ plus the growing invariant-neuron fraction (paper Fig 6).
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-from repro.fl.simulation import build_simulation
+from repro.fl import CohortConfig, SimulationConfig, build_simulation
 
-sim = build_simulation(
-    "femnist",
-    n_clients=5,
-    straggler_ids=(0,),      # client 0 is ~30% slower (paper Fig 2a regime)
-    method="invariant",
-    n_data=600,
-)
+sim = build_simulation(SimulationConfig(
+    workload="femnist",
+    policy="invariant",
+    cohort=CohortConfig(
+        n_clients=5,
+        straggler_ids=(0,),  # client 0 is ~30% slower (paper Fig 2a regime)
+        n_data=600,
+    ),
+))
 
 print(f"{'round':>5} {'round_time':>10} {'straggler':>9} {'target':>7} "
       f"{'r':>5} {'th':>8} {'inv%':>5} {'acc':>5}")

@@ -1,3 +1,5 @@
 from repro.core.aggregate import ClientUpdate, aggregate
-from repro.core.dropout import DropoutPolicy
+from repro.core.dropout import (DropoutPolicy, available_policies, get_policy,
+                                register_policy)
 from repro.core.fluid import FluidConfig, FluidServer
+from repro.core.maskbank import MaskBank

@@ -4,6 +4,11 @@ Every policy maps (group, dropout rate r) -> kept-neuron index array.
 r in (0, 1] is the *kept* fraction (sub-model size as a fraction of the
 global model, matching the paper's Table 2 convention).
 
+Policies live in a registry (``get_policy`` / ``register_policy``) so new
+selection strategies (FedDHAD-style adaptive dropout, CLIP client-side
+pruning, ...) plug in without touching the FL loop or the serving engine —
+both resolve policies by name through the same table.
+
 Invariant selection (paper §4/§5): drop the neurons most agreed-invariant by
 the non-straggler majority — ranked by (majority vote count, then lowest
 historical update magnitude) — never dropping more than the target count.
@@ -12,8 +17,9 @@ An EMA of stats across calibration steps implements the paper's
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
-from typing import Dict, Optional, Sequence
+from typing import Dict, Optional, Sequence, Type
 
 import numpy as np
 
@@ -47,26 +53,91 @@ def invariant_keep(votes: np.ndarray, stats: np.ndarray, r: float
     return np.sort(keep)
 
 
+# ---------------------------------------------------------------------------
+# policy registry
+
+_REGISTRY: Dict[str, Type["BasePolicy"]] = {}
+
+
+def register_policy(name: str):
+    """Class decorator: make a BasePolicy subclass resolvable by name."""
+    def deco(cls):
+        cls.method = name          # back-compat attribute (was a dataclass field)
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def available_policies() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_policy(name: str, unit_specs: Sequence[dict], seed: int = 0,
+               **kw) -> "BasePolicy":
+    """Instantiate a registered policy; extra kwargs are filtered to the
+    policy's own fields (e.g. ema_decay only applies to 'invariant')."""
+    try:
+        cls = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown dropout policy {name!r}; "
+                         f"available: {available_policies()}") from None
+    names = {f.name for f in dataclasses.fields(cls)}
+    return cls(unit_specs=unit_specs, seed=seed,
+               **{k: v for k, v in kw.items() if k in names})
+
+
 @dataclass
-class DropoutPolicy:
-    """Stateful selector. method in {random, ordered, invariant}."""
-    method: str
+class BasePolicy:
+    """Stateful selector over unit-spec'd neuron groups."""
     unit_specs: Sequence[dict]
     seed: int = 0
-    ema_decay: float = 0.5
     _rng: np.random.RandomState = field(init=False, repr=False)
-    _ema_stats: Optional[Dict[str, np.ndarray]] = field(default=None,
-                                                        repr=False)
-    _votes: Optional[Dict[str, np.ndarray]] = field(default=None, repr=False)
 
     def __post_init__(self):
         self._rng = np.random.RandomState(self.seed)
 
     # ------------------------------------------------------------------ state
     def observe(self, per_client_stats, th: float):
-        """Feed this calibration step's non-straggler stats (invariant only)."""
-        if self.method != "invariant":
-            return
+        """Feed this calibration step's non-straggler stats (no-op unless the
+        policy is history-driven)."""
+
+    # -------------------------------------------------------------- selection
+    def keep(self, name: str, size: int, r: float) -> np.ndarray:
+        raise NotImplementedError
+
+    def keep_map(self, r: float) -> Dict[str, np.ndarray]:
+        """Kept indices per group for sub-model size r."""
+        out = {}
+        for g in self.unit_specs:
+            name, size = g["name"], g["size"]
+            out[name] = (np.arange(size) if r >= 1.0
+                         else self.keep(name, size, r))
+        return out
+
+
+@register_policy("random")
+@dataclass
+class RandomPolicy(BasePolicy):
+    def keep(self, name, size, r):
+        return random_keep(self._rng, size, r)
+
+
+@register_policy("ordered")
+@dataclass
+class OrderedPolicy(BasePolicy):
+    def keep(self, name, size, r):
+        return ordered_keep(size, r)
+
+
+@register_policy("invariant")
+@dataclass
+class InvariantPolicy(BasePolicy):
+    ema_decay: float = 0.5
+    _ema_stats: Optional[Dict[str, np.ndarray]] = field(default=None,
+                                                        repr=False)
+    _votes: Optional[Dict[str, np.ndarray]] = field(default=None, repr=False)
+
+    def observe(self, per_client_stats, th: float):
         votes = inv.invariant_counts(per_client_stats, th)
         means = inv.mean_stats(per_client_stats)
         if self._ema_stats is None:
@@ -79,24 +150,13 @@ class DropoutPolicy:
             self._votes = {k: a * self._votes[k] + (1 - a) * votes[k]
                            for k in votes}
 
-    # -------------------------------------------------------------- selection
-    def keep_map(self, r: float) -> Dict[str, np.ndarray]:
-        """Kept indices per group for sub-model size r."""
-        out = {}
-        for g in self.unit_specs:
-            name, size = g["name"], g["size"]
-            if r >= 1.0:
-                out[name] = np.arange(size)
-            elif self.method == "random":
-                out[name] = random_keep(self._rng, size, r)
-            elif self.method == "ordered":
-                out[name] = ordered_keep(size, r)
-            elif self.method == "invariant":
-                if self._votes is None:   # no stats yet: fall back to ordered
-                    out[name] = ordered_keep(size, r)
-                else:
-                    out[name] = invariant_keep(self._votes[name],
-                                               self._ema_stats[name], r)
-            else:
-                raise ValueError(self.method)
-        return out
+    def keep(self, name, size, r):
+        if self._votes is None:       # no stats yet: fall back to ordered
+            return ordered_keep(size, r)
+        return invariant_keep(self._votes[name], self._ema_stats[name], r)
+
+
+def DropoutPolicy(method: str, unit_specs: Sequence[dict], seed: int = 0,
+                  **kw) -> BasePolicy:
+    """Back-compat constructor-shaped alias for get_policy()."""
+    return get_policy(method, unit_specs, seed=seed, **kw)

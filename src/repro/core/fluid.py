@@ -21,7 +21,7 @@ from repro.core import invariant as inv
 from repro.core import straggler as strag
 from repro.core import submodel as sub
 from repro.core.aggregate import ClientUpdate, aggregate
-from repro.core.dropout import DropoutPolicy, keep_count
+from repro.core.dropout import get_policy, keep_count
 
 
 @dataclass
@@ -58,7 +58,7 @@ class FluidServer:
         self.cfg = cfg
         self.eval_fn = eval_fn
         self.engine = engine          # fl.fleet.FleetEngine or None
-        self.policy = DropoutPolicy(
+        self.policy = get_policy(
             cfg.method if cfg.method != "none" else "ordered",
             unit_specs, seed=cfg.seed)
         self.th: Optional[float] = None

@@ -1,3 +1,4 @@
 from repro.fl.client import FleetClient, SimClient
 from repro.fl.fleet import CohortResult, FleetEngine
-from repro.fl.simulation import build_simulation, run_experiment
+from repro.fl.simulation import (CohortConfig, SimulationConfig,
+                                 build_simulation, run_experiment)

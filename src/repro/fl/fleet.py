@@ -17,18 +17,25 @@ This engine runs the *entire cohort* as one compiled program:
   * Local SGD for all C clients is jax.vmap over a jax.lax.scan of
     minibatches. Shards of different sizes pad to the cohort-max step count
     and batch size; padding is neutralized by per-sample loss weights.
+  * Hyperparameters are data too: learning rates are a vmapped (C,) array
+    and per-client step counts ride on the same zero-weight padding that
+    absorbs ragged shards, so heterogeneous (lr, local-epochs) cohorts —
+    and the serving engine's per-request sub-models (launch/serving.py) —
+    share one compiled program with the uniform case.
   * Gradients are mask-projected each step, so deltas come back already
     mask-zeroed in full coordinates — exactly what embed_delta() would have
     produced — and aggregation collapses to one fused device-side
     tree-reduce (core/aggregate.aggregate_stacked) instead of per-update
     Python arithmetic.
-  * Masks are deduplicated into a (K, ...) bank (all-ones row 0 + one row
-    per straggler keep-map) indexed per client, so mask memory scales with
-    the number of *distinct* sub-models, not the fleet size.
+  * Masks are deduplicated into a (K, ...) bank (core/maskbank.MaskBank:
+    all-ones row 0 + one row per straggler keep-map) indexed per client, so
+    mask memory scales with the number of *distinct* sub-models, not the
+    fleet size.
 
 Numerical contract (tests/test_fleet.py): with the same seeds, a fleet
 round reproduces the sequential round's deltas, sim-times, and aggregated
-params up to float summation order.
+params up to float summation order — including cohorts with per-client
+(lr, local-epochs).
 """
 from __future__ import annotations
 
@@ -44,6 +51,7 @@ import numpy as np
 from repro.core import invariant as inv
 from repro.core import submodel as sub
 from repro.core.aggregate import ClientUpdate, aggregate_stacked
+from repro.core.maskbank import MaskBank
 from repro.fl.client import FleetClient, make_weighted_loss
 
 _COHORT_CACHE: Dict[str, callable] = {}
@@ -63,13 +71,15 @@ def _cohort_fn(model_cls):
         loss = make_weighted_loss(model_cls)
 
         @functools.partial(jax.jit, static_argnames=("n_steps",))
-        def run(params, mask_bank, mask_idx, xs, ys, sw, lr, n_steps):
+        def run(params, mask_bank, mask_idx, xs, ys, sw, lrs, n_steps):
             """params: full tree (broadcast); mask_bank: (K, ...) leaves;
             mask_idx: (C,); xs: (C, S, bs, ...); ys: (C, S, bs);
             sw: (C, S, bs) per-sample weights — 1.0 on real samples, 0.0 on
-            batch/step padding (an all-zero step is a no-op).
+            batch/step padding (an all-zero step is a no-op);
+            lrs: (C,) per-client learning rates (hyperparameters are data —
+            heterogeneous cohorts don't re-specialize the program).
             Returns mask-zeroed full-coordinate deltas, (C, ...) leaves."""
-            def one_client(mi, x, y, v):
+            def one_client(mi, x, y, v, lr):
                 m = jax.tree.map(lambda b: b[mi], mask_bank)
                 w0 = sub.apply_mask(params, m)
 
@@ -88,7 +98,7 @@ def _cohort_fn(model_cls):
                                         unroll=_SCAN_UNROLL)
                 # every update step carried the mask factor => pre-zeroed
                 return jax.tree.map(lambda a, b: a - b, w, w0)
-            return jax.vmap(one_client)(mask_idx, xs, ys, sw)
+            return jax.vmap(one_client)(mask_idx, xs, ys, sw, lrs)
         _COHORT_CACHE[key] = run
     return _COHORT_CACHE[key]
 
@@ -136,7 +146,12 @@ class CohortResult:
 
 
 class FleetEngine:
-    """Runs a homogeneous-model client fleet as single vmapped programs."""
+    """Runs a homogeneous-model client fleet as single vmapped programs.
+
+    The model architecture is uniform across the cohort (one param tree
+    shape); per-client hyperparameters (lr, local epochs / step counts) and
+    per-client sub-model masks are vmapped data, not program structure.
+    """
 
     def __init__(self, model_cls, clients: Sequence[FleetClient], unit_specs):
         self.model_cls = model_cls
@@ -144,20 +159,13 @@ class FleetEngine:
         self.unit_specs = unit_specs
         if not self.clients:
             raise ValueError("FleetEngine needs at least one client")
-        for attr in ("lr", "local_epochs"):
-            vals = {getattr(c, attr) for c in self.clients}
-            if len(vals) > 1:
-                raise ValueError(
-                    f"fleet backend needs a uniform client {attr}, got {vals}"
-                    " — use backend='sequential' for heterogeneous cohorts")
-        c0 = self.clients[0]
         # batch dim pads to the cohort max; smaller shards get sample weights
         self.bs = max(c.eff_batch_size for c in self.clients)
-        self.epochs = c0.local_epochs
-        self.lr = c0.lr
-        self.steps = max(
-            self.epochs * (c.n_samples // c.eff_batch_size)
-            for c in self.clients)
+        self.client_steps = np.array(
+            [c.local_epochs * (c.n_samples // c.eff_batch_size)
+             for c in self.clients], np.int32)
+        self.steps = int(self.client_steps.max())
+        self.lrs = np.array([c.lr for c in self.clients], np.float32)
         self._run = _cohort_fn(model_cls)
         self._ones_mask: Optional[dict] = None
         self._stats_jit = None
@@ -175,10 +183,12 @@ class FleetEngine:
                 lambda p, ds: jax.vmap(lambda d: one(p, d))(ds))
         return self._stats_jit(prev, stacked_deltas)
 
-    def _stacked_data(self):
+    def _stacked_data(self, n_steps: Optional[np.ndarray] = None):
         """(xs, ys, sw): per-client epoch batches padded to (steps, bs);
         sw is 1.0 on real samples, 0.0 on batch/step padding. Consumes each
-        client's RNG exactly like SimClient.train.
+        client's RNG exactly like SimClient.train. n_steps (C,) caps the
+        number of *real* SGD steps per client by zero-weighting the tail —
+        step counts are data riding on the same padding as ragged shards.
 
         Rebuilt host-side every round (only the permutations change); at
         paper scales this is <2% of the cohort program's runtime. If fleets
@@ -196,13 +206,15 @@ class FleetEngine:
             xs[i, :s, :b] = x
             ys[i, :s, :b] = y
             sw[i, :s, :b] = 1.0
+            if n_steps is not None:
+                sw[i, int(n_steps[i]):] = 0.0
         return jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(sw)
 
     def _mask_bank(self, params, keep_maps: Dict[int, dict]):
         """(bank, idx, n_params_by_row): all-ones row 0 + one row per
-        straggler keep-map; idx maps client position -> bank row. Cached
-        across rounds while the keep-maps are unchanged (they only move on
-        calibration steps)."""
+        *distinct* straggler keep-map (core/maskbank.MaskBank dedupe); idx
+        maps client position -> bank row. Cached across rounds while the
+        keep-maps are unchanged (they only move on calibration steps)."""
         km_fp = {cid: tuple((g, kept.tobytes())
                             for g, kept in sorted(km.items()))
                  for cid, km in keep_maps.items()}
@@ -212,16 +224,13 @@ class FleetEngine:
         if self._ones_mask is None:
             self._ones_mask = jax.tree.map(
                 lambda p: jnp.ones(p.shape, jnp.float32), params)
-        rows = [self._ones_mask]
-        row_of = {}                 # client id -> bank row
-        row_of_fp = {}              # distinct keep-map content -> bank row
-        for cid in sorted(keep_maps):
-            if km_fp[cid] not in row_of_fp:
-                row_of_fp[km_fp[cid]] = len(rows)
-                rows.append(sub.keep_mask(params, self.unit_specs,
-                                          keep_maps[cid]))
-            row_of[cid] = row_of_fp[km_fp[cid]]
-        bank = jax.tree.map(lambda *ls: jnp.stack(ls), *rows)
+        bank_obj = MaskBank(self._ones_mask)
+        row_of = {cid: bank_obj.row_for(
+            km_fp[cid],
+            functools.partial(sub.keep_mask, params, self.unit_specs,
+                              keep_maps[cid]))
+            for cid in sorted(keep_maps)}
+        bank = bank_obj.stacked()
         idx = jnp.asarray([row_of.get(c.id, 0) for c in self.clients],
                           jnp.int32)
         # exact integer param counts per row (per-leaf int32 sums of a 0/1
@@ -235,14 +244,30 @@ class FleetEngine:
 
     # ------------------------------------------------------------------- API
     def run_cohort(self, params, keep_maps: Dict[int, dict],
-                   rates: Optional[Dict[int, float]] = None) -> CohortResult:
+                   rates: Optional[Dict[int, float]] = None,
+                   lr=None, n_steps=None) -> CohortResult:
         """One FL round for the whole fleet: keep_maps/rates per straggler
-        client id (absent => full model)."""
+        client id (absent => full model).
+
+        lr: optional scalar or (C,) array overriding the clients' own
+        learning rates; n_steps: optional (C,) int array capping each
+        client's real SGD steps. Both are vmapped data — heterogeneous
+        values reuse the same compiled program as the uniform cohort."""
         rates = rates or {}
-        xs, ys, sw = self._stacked_data()
+        if lr is None:
+            lrs = self.lrs
+        else:
+            lrs = np.broadcast_to(np.asarray(lr, np.float32),
+                                  (len(self.clients),))
+        if n_steps is not None:
+            n_steps = np.asarray(n_steps, np.int32)
+            if n_steps.shape != (len(self.clients),):
+                raise ValueError(f"n_steps must be ({len(self.clients)},), "
+                                 f"got {n_steps.shape}")
+        xs, ys, sw = self._stacked_data(n_steps)
         bank, idx, n_by_row = self._mask_bank(params, keep_maps)
-        deltas = self._run(params, bank, idx, xs, ys, sw, self.lr,
-                           self.steps)
+        deltas = self._run(params, bank, idx, xs, ys, sw,
+                           jnp.asarray(lrs), self.steps)
         idx_host = np.asarray(idx)
         sim_times = {
             c.id: c.draw_sim_time(rates.get(c.id, 1.0),

@@ -1,18 +1,25 @@
 """End-to-end FL simulation assembly: data -> clients -> FluidServer.
 
-`build_simulation` wires a paper workload (femnist/cifar10/shakespeare) to a
-client fleet with a chosen heterogeneity profile; `run_experiment` is the
-one-call driver used by benchmarks and examples.
+Experiments are described by a typed `SimulationConfig` (workload, backend,
+policy, cohort composition, speed model) instead of a loose kwargs bag, so
+configs can be constructed programmatically, validated up front, and carry
+per-client heterogeneity (learning rates, local-epoch counts) that the
+fleet backend executes as vmapped data. `build_simulation` still accepts
+the legacy positional-workload call shape as a DeprecationWarning shim;
+`run_experiment` is the one-call driver used by benchmarks and examples.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+import warnings
+
+from dataclasses import dataclass, field, fields
+from typing import Dict, List, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.dropout import available_policies
 from repro.core.fluid import FluidConfig, FluidServer
 from repro.data.partition import partition_non_iid
 from repro.data.synthetic import make_dataset
@@ -27,6 +34,64 @@ WORKLOADS = {
     "cifar10": ("cifar10", "cifar_vgg9", 0.01, 20),
     "shakespeare": ("shakespeare", "shakespeare_lstm", 0.001, 32),
 }
+
+
+@dataclass
+class CohortConfig:
+    """Who trains: fleet composition + per-client hyperparameters.
+
+    `local_epochs` and `lr` accept either one value for the whole cohort or
+    a length-n_clients sequence; heterogeneous values are plain data to the
+    fleet backend (one compiled program either way). `lr=None` defers to the
+    workload's paper default."""
+    n_clients: int = 5
+    straggler_ids: Sequence[int] = (0,)
+    local_epochs: Union[int, Sequence[int]] = 1
+    lr: Union[None, float, Sequence[float]] = None
+    n_data: int = 2000
+    slow_factor: float = 1.3
+
+    def _per_client(self, val, default, name: str) -> list:
+        if val is None:
+            val = default
+        if np.ndim(val) == 0:
+            return [type(default)(val)] * self.n_clients
+        vals = list(val)
+        if len(vals) != self.n_clients:
+            raise ValueError(f"{name} must be a scalar or length "
+                             f"{self.n_clients}, got length {len(vals)}")
+        return [type(default)(v) for v in vals]
+
+    def client_lrs(self, default_lr: float) -> List[float]:
+        return self._per_client(self.lr, default_lr, "lr")
+
+    def client_epochs(self) -> List[int]:
+        return self._per_client(self.local_epochs, 1, "local_epochs")
+
+
+@dataclass
+class SimulationConfig:
+    """A complete experiment description: workload x backend x dropout
+    policy x cohort, plus the straggler speed model."""
+    workload: str = "femnist"
+    backend: str = "sequential"            # see BACKENDS
+    policy: str = "invariant"              # see core.dropout.available_policies
+    cohort: CohortConfig = field(default_factory=CohortConfig)
+    speeds: Optional[Dict[int, float]] = None   # None => default_speeds()
+    fixed_rate: Optional[float] = None
+    straggler_frac: Optional[float] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.workload not in WORKLOADS:
+            raise ValueError(f"workload must be one of "
+                             f"{tuple(WORKLOADS)}, got {self.workload!r}")
+        if self.backend not in BACKENDS:
+            raise ValueError(f"backend must be one of {BACKENDS}, "
+                             f"got {self.backend!r}")
+        if self.policy != "none" and self.policy not in available_policies():
+            raise ValueError(f"unknown dropout policy {self.policy!r}; "
+                             f"available: {available_policies()} or 'none'")
 
 
 @dataclass
@@ -58,31 +123,25 @@ def default_speeds(n_clients: int, straggler_ids: Sequence[int],
     return speeds
 
 
-def build_simulation(workload: str, n_clients: int = 5,
-                     straggler_ids: Sequence[int] = (0,),
-                     method: str = "invariant",
-                     fixed_rate: Optional[float] = None,
-                     straggler_frac: Optional[float] = None,
-                     slow_factor: float = 1.3,
-                     n_data: int = 2000, local_epochs: int = 1,
-                     seed: int = 0, speeds: Optional[Dict] = None,
-                     backend: str = "sequential") -> Simulation:
-    if backend not in BACKENDS:
-        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
-    ds_name, model_name, lr, bs = WORKLOADS[workload]
+def _build(cfg: SimulationConfig) -> Simulation:
+    co = cfg.cohort
+    ds_name, model_name, lr, bs = WORKLOADS[cfg.workload]
     model_cls = MODELS[model_name]
-    ds = make_dataset(ds_name, n=n_data, n_test=max(400, n_data // 5),
-                      n_partitions=max(n_clients * 2, 16), seed=seed)
-    parts = partition_non_iid(ds, n_clients, seed=seed)
+    ds = make_dataset(ds_name, n=co.n_data, n_test=max(400, co.n_data // 5),
+                      n_partitions=max(co.n_clients * 2, 16), seed=cfg.seed)
+    parts = partition_non_iid(ds, co.n_clients, seed=cfg.seed)
+    speeds = cfg.speeds
     if speeds is None:
-        speeds = default_speeds(n_clients, straggler_ids,
-                                slow_factor=slow_factor, seed=seed)
-    client_cls = FleetClient if backend == "fleet" else SimClient
+        speeds = default_speeds(co.n_clients, co.straggler_ids,
+                                slow_factor=co.slow_factor, seed=cfg.seed)
+    lrs = co.client_lrs(lr)
+    epochs = co.client_epochs()
+    client_cls = FleetClient if cfg.backend == "fleet" else SimClient
     clients = [client_cls(i, model_cls, ds.x[parts[i]], ds.y[parts[i]],
-                          speed=speeds[i], batch_size=bs, lr=lr,
-                          local_epochs=local_epochs, seed=seed)
-               for i in range(n_clients)]
-    params = model_cls.init(jax.random.PRNGKey(seed))
+                          speed=speeds[i], batch_size=bs, lr=lrs[i],
+                          local_epochs=epochs[i], seed=cfg.seed)
+               for i in range(co.n_clients)]
+    params = model_cls.init(jax.random.PRNGKey(cfg.seed))
 
     xt, yt = jnp.asarray(ds.x_test), jnp.asarray(ds.y_test)
 
@@ -90,17 +149,55 @@ def build_simulation(workload: str, n_clients: int = 5,
         logits = model_cls.apply(p, xt)
         return float((jnp.argmax(logits, -1) == yt).mean())
 
-    cfg = FluidConfig(method=method, fixed_rate=fixed_rate,
-                      straggler_frac=straggler_frac, seed=seed)
+    fcfg = FluidConfig(method=cfg.policy, fixed_rate=cfg.fixed_rate,
+                       straggler_frac=cfg.straggler_frac, seed=cfg.seed)
     engine = (FleetEngine(model_cls, clients, model_cls.UNIT_SPECS)
-              if backend == "fleet" else None)
-    server = FluidServer(params, model_cls.UNIT_SPECS, clients, cfg,
+              if cfg.backend == "fleet" else None)
+    server = FluidServer(params, model_cls.UNIT_SPECS, clients, fcfg,
                          eval_fn=eval_fn, engine=engine)
-    return Simulation(server, clients, model_cls, ds, backend)
+    return Simulation(server, clients, model_cls, ds, cfg.backend)
 
 
-def run_experiment(workload: str, rounds: int, **kw):
+_COHORT_KEYS = {f.name for f in fields(CohortConfig)}
+_TOP_KEYS = {f.name for f in fields(SimulationConfig)} - {"workload", "cohort"}
+
+
+def build_simulation(config=None, **kw) -> Simulation:
+    """Build from a SimulationConfig (canonical) or from the legacy
+    `build_simulation("femnist", n_clients=..., method=...)` shape
+    (positional or `workload=` keyword), which still works but emits a
+    DeprecationWarning."""
+    if config is None:
+        config = kw.pop("workload")
+    if isinstance(config, SimulationConfig):
+        if kw:
+            raise TypeError("pass overrides inside SimulationConfig, not as "
+                            f"kwargs: {sorted(kw)}")
+        return _build(config)
+    if not isinstance(config, str):
+        raise TypeError(f"expected SimulationConfig or workload name, "
+                        f"got {type(config).__name__}")
+    warnings.warn(
+        "build_simulation(workload, **kwargs) is deprecated; construct a "
+        "repro.fl.SimulationConfig and pass it instead",
+        DeprecationWarning, stacklevel=2)
+    if "method" in kw:                    # legacy name for `policy`
+        kw["policy"] = kw.pop("method")
+    cohort = CohortConfig(**{k: kw.pop(k) for k in list(kw)
+                             if k in _COHORT_KEYS})
+    unknown = set(kw) - _TOP_KEYS
+    if unknown:
+        raise TypeError(f"unknown build_simulation kwargs: {sorted(unknown)}")
+    return _build(SimulationConfig(workload=config, cohort=cohort, **kw))
+
+
+def run_experiment(workload, rounds: int, **kw):
+    """Driver: build + run. `workload` is a SimulationConfig or a legacy
+    workload name (routed through the build_simulation shim)."""
     eval_every = kw.pop("eval_every", max(1, rounds // 5))
+    if isinstance(workload, SimulationConfig) and kw:
+        raise TypeError("pass overrides inside SimulationConfig, not as "
+                        f"kwargs: {sorted(kw)}")
     sim = build_simulation(workload, **kw)
     hist = sim.server.run(rounds, eval_every=eval_every)
     return sim, hist

@@ -56,6 +56,35 @@ _ACTS = {"relu": lambda h: jnp.maximum(h, 0.0),
          "silu": jax.nn.silu}
 
 
+def _kernel_batch(tmask_ref, x_ref, mask_ref, win_ref, wgate_ref, wout_ref,
+                  y_ref, acc_ref, *, n_f_blocks, act):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(tmask_ref[i * n_f_blocks + j] > 0)
+    def _block():
+        x = x_ref[...]
+        h = jnp.dot(x, win_ref[...],
+                    preferred_element_type=jnp.float32)
+        if wgate_ref is not None:
+            g = jnp.dot(x, wgate_ref[...],
+                        preferred_element_type=jnp.float32)
+            h = act(g) * h
+        else:
+            h = act(h)
+        h = h * mask_ref[...].astype(jnp.float32)
+        acc_ref[...] += jnp.dot(h.astype(x.dtype), wout_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_f_blocks - 1)
+    def _finalize():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
 @functools.partial(jax.jit, static_argnames=("act", "block_m", "interpret"))
 def masked_ffn(x, w_in, w_out, block_mask, w_gate=None, *, act: str = "silu",
                block_m: int = 128, interpret: bool = True):
@@ -94,6 +123,79 @@ def masked_ffn(x, w_in, w_out, block_mask, w_gate=None, *, act: str = "silu",
             grid=grid,
             in_specs=[
                 pl.BlockSpec((block_m, d), lambda i, j, m: (i, 0)),
+                pl.BlockSpec((d, BLOCK_NEURONS), lambda i, j, m: (0, j)),
+                *gate_specs,
+                pl.BlockSpec((BLOCK_NEURONS, d), lambda i, j, m: (j, 0)),
+            ],
+            out_specs=pl.BlockSpec((block_m, d), lambda i, j, m: (i, 0)),
+            scratch_shapes=[pltpu.VMEM((block_m, d), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((MP, d), x.dtype),
+        interpret=interpret,
+    )(*args)
+    return y[:M]
+
+
+@functools.partial(jax.jit, static_argnames=("act", "block_m", "interpret"))
+def masked_ffn_batch(x, w_in, w_out, row_mask, w_gate=None, *,
+                     act: str = "silu", block_m: int = 8,
+                     interpret: bool = True):
+    """Per-ROW-masked FFN — the serving decode variant, where each row of x
+    is a different request carrying its own sub-model mask.
+
+    x: (M, d); w_in[, w_gate]: (d, F); w_out: (F, d); row_mask: (M, F) 0/1.
+    Returns y: (M, d) in x.dtype. F must be a multiple of 128.
+
+    A tile (i, j) is skipped entirely only when NO row in m-block i keeps
+    any neuron of f-block j (tile_mask OR-reduce, scalar-prefetch driven,
+    same ``pl.when`` structure as ``masked_ffn``); surviving tiles apply the
+    exact per-row mask to the hidden activations. With a homogeneous decode
+    batch this degenerates to the block-skip kernel; with a mixed-rate batch
+    the skip rate follows the UNION of the requests' kept sets per m-block —
+    sorting requests by mask (launch/serving.py admits per-slot) recovers
+    most of the single-mask savings.
+    """
+    M, d = x.shape
+    F = w_in.shape[1]
+    assert F % BLOCK_NEURONS == 0 and row_mask.shape == (M, F), \
+        (row_mask.shape, (M, F))
+    block_m = min(block_m, M)
+    pad_m = (-M) % block_m
+    if pad_m:
+        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+        row_mask = jnp.pad(row_mask, ((0, pad_m), (0, 0)))
+    MP = x.shape[0]
+    n_f = F // BLOCK_NEURONS
+    grid = (MP // block_m, n_f)
+
+    # (m_blocks * f_blocks,) i32: does any row of m-block i touch f-block j?
+    tile_mask = (row_mask.reshape(grid[0], block_m, n_f, BLOCK_NEURONS)
+                 .max(axis=(1, 3)) > 0).astype(jnp.int32).reshape(-1)
+
+    gate_specs = []
+    args = [tile_mask, x, row_mask.astype(x.dtype), w_in]
+    if w_gate is not None:
+        args.append(w_gate)
+        gate_specs = [pl.BlockSpec((d, BLOCK_NEURONS), lambda i, j, m: (0, j))]
+    args.append(w_out)
+
+    kernel = functools.partial(
+        _kernel_batch, n_f_blocks=n_f, act=_ACTS[act])
+    if w_gate is None:
+        kernel_fn = lambda t, xr, mr, wi, wo, y, a: kernel(t, xr, mr, wi,
+                                                           None, wo, y, a)
+    else:
+        kernel_fn = kernel
+
+    y = pl.pallas_call(
+        kernel_fn,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((block_m, d), lambda i, j, m: (i, 0)),
+                pl.BlockSpec((block_m, BLOCK_NEURONS),
+                             lambda i, j, m: (i, j)),
                 pl.BlockSpec((d, BLOCK_NEURONS), lambda i, j, m: (0, j)),
                 *gate_specs,
                 pl.BlockSpec((BLOCK_NEURONS, d), lambda i, j, m: (j, 0)),

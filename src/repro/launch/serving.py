@@ -1,0 +1,379 @@
+"""Personalized sub-model serving: one compiled decode program, any client.
+
+FLuID trains per-client sub-models; serving them naively would compile one
+decode program per dropout rate (each rate is a different physical shape).
+This engine lifts the fleet's "mask is data, not shape" idiom (DESIGN.md §2,
+fl/fleet.py) to inference:
+
+  * Every request carries a 0/1 keep-mask over FFN hidden units. Masks are
+    deduplicated into a fixed-capacity ``core.maskbank.MaskBank`` — row 0 is
+    the all-ones full model — and each batch slot holds an int32 row index.
+    The bank's stacked shape is a compile-time constant (capacity rows, tail
+    padded with ones), so admitting a never-seen mask cannot recompile.
+  * Decode is a single jitted program over the whole slot batch: a
+    ``lax.scan`` of ``chunk`` greedy decode steps per dispatch, per-slot
+    positions, per-slot masks gathered from the bank. Mixing dropout rates
+    0.0 / 0.5 / anything in one batch traces exactly once.
+  * Continuous batching at chunk granularity: between chunks the host
+    retires finished slots, admits queued requests (prefill + cache splice),
+    and re-enters the same compiled chunk. Requests with different prompt
+    and generation lengths share the program; empty slots decode garbage
+    harmlessly (their cache slots are invalid, softmax over an all-masked
+    row is a uniform average of zero values).
+  * Prefill is batch-1, right-padded to a fixed prompt capacity, next-token
+    logits gathered at the true last position. Right padding is exact for
+    attention archs: the padded positions' K/V are causally masked until
+    decode overwrites each slot exactly when generation reaches its
+    position. Recurrent mixers (rwkv / rg-lru) fold garbage into state, so
+    for those archs prompts must fill the prompt window exactly.
+
+Masking the FFN hidden activation equals serving the extracted sub-model:
+for act(0) = 0 activations, zeroing h[i] is identical to deleting column i
+of w_in/w_gate and row i of w_out (see ``apply_masks_to_params``, the
+reference used by tests/test_serving.py for token-level parity).
+
+The Pallas kernels (kernels/masked_ffn.py::masked_ffn_batch tile-skipping
+FFN, kernels/decode_gqa.py flash-decode) plug in via
+``sharding.serve_kernels_context`` — opt-in, default off on CPU.
+"""
+from __future__ import annotations
+
+import time
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core import transformer_hooks as hooks
+from repro.core.dropout import keep_count
+from repro.core.maskbank import FULL_MODEL, MaskBank
+from repro.launch import sharding as shlib
+from repro.models import model as model_lib
+from repro.models import transformer
+
+
+# ---------------------------------------------------------------------------
+# mask construction helpers
+
+def rate_masks(cfg: ModelConfig, r: float, policy: str = "ordered",
+               seed: int = 0):
+    """Per-segment FFN keep-mask pytree for sub-model size r (1.0 = full).
+
+    policy 'ordered' keeps the leading k units per layer (FjORD-style);
+    'random' draws k units per (layer, repeat) from ``seed``. Real FLuID
+    deployments derive masks from invariant statistics instead
+    (core/transformer_hooks.build_masks); this helper exists so serving can
+    be exercised without a training run."""
+    base = hooks.full_masks(cfg)
+    if r >= 1.0:
+        return base
+    rng = np.random.RandomState(seed)
+    out = []
+    for seg in base:
+        unit = {}
+        for lname, entry in seg.items():
+            m = {}
+            for key, ones in entry.items():
+                shape = ones.shape
+                f = shape[-1]
+                k = keep_count(f, r)
+                mask = np.zeros(shape, np.float32)
+                if policy == "random":
+                    flat = mask.reshape(-1, f)
+                    for row in range(flat.shape[0]):
+                        flat[row, rng.choice(f, size=k, replace=False)] = 1.0
+                else:
+                    mask[..., :k] = 1.0
+                m[key] = jnp.asarray(mask)
+            unit[lname] = m
+        out.append(unit)
+    return out
+
+
+def masks_from_keep_map(cfg: ModelConfig, keep_map: Dict[str, np.ndarray]):
+    """FL bridge: a core-side keep_map {'seg<si>/l<i>/ffn': kept indices}
+    (or the flat {'l<i>': ...} shape of single-segment models) -> the
+    serving mask pytree."""
+    base = hooks.full_masks(cfg)
+    out = []
+    for si, seg in enumerate(base):
+        unit = {}
+        for lname, entry in seg.items():
+            m = {}
+            for key, ones in entry.items():
+                kept = keep_map.get(f"seg{si}/{lname}/{key}",
+                                    keep_map.get(lname))
+                if kept is None:
+                    m[key] = ones
+                else:
+                    mask = np.zeros(ones.shape, np.float32)
+                    mask[..., np.asarray(kept, np.int64)] = 1.0
+                    m[key] = jnp.asarray(mask)
+            unit[lname] = m
+        out.append(unit)
+    return out
+
+
+def mask_fingerprint(masks) -> object:
+    if masks is None:
+        return FULL_MODEL
+    return tuple(np.asarray(leaf).tobytes()
+                 for leaf in jax.tree.leaves(masks))
+
+
+def apply_masks_to_params(params, masks, cfg: ModelConfig):
+    """Reference sub-model: bake the FFN masks into the weights (zero the
+    dropped units' in-columns, biases, and out-rows). Since act(0) = 0 for
+    every supported activation, ``forward(masked_params)`` equals the
+    engine's activation-masked decode token for token — the parity oracle
+    for tests, not a serving path."""
+    segs = transformer.build_segments(cfg)
+    new = jax.tree.map(lambda x: x, params)     # shallow-copy the tree
+    for si, seg in enumerate(segs):
+        seg_p = dict(new["stack"][f"seg{si}"])
+        for i, (mixer, ffn) in enumerate(seg.unit):
+            entry = masks[si].get(f"l{i}", {})
+            if "ffn" not in entry or ffn not in ("dense", "cmix"):
+                continue
+            m = entry["ffn"]                     # (R, f)
+            key = "ffn" if ffn == "dense" else "cmix"
+            lp = dict(seg_p[f"l{i}"])
+            fp = dict(lp[key])
+            for w in ("w_in", "w_gate"):
+                if w in fp:
+                    fp[w] = fp[w] * m[:, None, :].astype(fp[w].dtype)
+            for b in ("b_in", "b_gate"):
+                if b in fp:
+                    fp[b] = fp[b] * m.astype(fp[b].dtype)
+            fp["w_out"] = fp["w_out"] * m[:, :, None].astype(
+                fp["w_out"].dtype)
+            lp[key] = fp
+            seg_p[f"l{i}"] = lp
+        new["stack"][f"seg{si}"] = seg_p
+    return new
+
+
+# ---------------------------------------------------------------------------
+# requests
+
+@dataclass
+class ServeRequest:
+    """One generation request: prompt tokens + its personal sub-model.
+
+    masks=None serves the full model (mask-bank row 0). Requests with equal
+    masks share a bank row — the dedupe that makes per-client personalization
+    affordable at fleet scale."""
+    tokens: np.ndarray                 # (L,) int32 prompt
+    gen_len: int = 16
+    masks: Optional[object] = None     # rate_masks()-shaped pytree or None
+    rid: int = field(default=-1)       # assigned by ServeEngine.submit
+
+    def fingerprint(self):
+        return mask_fingerprint(self.masks)
+
+
+# ---------------------------------------------------------------------------
+# engine
+
+class ServeEngine:
+    """Continuous-batching greedy decoder over personalized sub-models.
+
+    One engine = one compiled prefill step + one compiled cache-splice + one
+    compiled decode chunk, shared by every request regardless of its dropout
+    rate, prompt length, or generation length. ``trace_counts`` records how
+    many times each jitted body actually traced — the no-recompile contract
+    is asserted in tests/test_serving.py, not just documented."""
+
+    def __init__(self, cfg: ModelConfig, params, *, batch_size: int = 4,
+                 max_prompt_len: int = 16, max_gen_len: int = 16,
+                 chunk: int = 8, bank_size: int = 8, mla_absorb: bool = False,
+                 kernels: Optional[dict] = None):
+        if cfg.is_encdec:
+            raise NotImplementedError(
+                "ServeEngine covers decoder-only stacks; encoder-decoder "
+                "serving still goes through launch.serve.serve()")
+        self.cfg = cfg
+        self.params = params
+        self.B = batch_size
+        self.max_prompt_len = max_prompt_len
+        self.max_gen_len = max_gen_len
+        self.chunk = min(chunk, max_gen_len) if max_gen_len > 1 else 1
+        self.mla_absorb = mla_absorb
+        self._kernels = kernels or {}
+        segs = transformer.build_segments(cfg)
+        self.recurrent = any(mixer in ("rglru", "rwkv")
+                             for seg in segs for mixer, _ in seg.unit)
+        # cache headroom: decode runs in whole chunks, so a slot can write
+        # up to chunk-ceil(gen_len-1) positions past its prompt; sizing for
+        # the worst case keeps slot idx == pos (no ring wrap), which the
+        # decode_gqa kernel's contiguous-prefix lengths rely on.
+        n_chunks = -(-(max_gen_len - 1) // self.chunk) if max_gen_len > 1 else 0
+        self.cache_len = max_prompt_len + max(n_chunks, 1) * self.chunk
+        self.bank = MaskBank(hooks.full_masks(cfg), capacity=bank_size)
+
+        self.trace_counts = {"prefill": 0, "decode": 0, "insert": 0}
+        self._build_fns()
+
+        self.caches = self._init_caches()
+        self.tok = np.zeros((self.B, 1), np.int32)
+        self.pos = np.zeros((self.B,), np.int32)
+        self.row = np.zeros((self.B,), np.int32)
+        self.queue: deque = deque()
+        self.live: Dict[int, dict] = {}
+        self._next_rid = 0
+        self.stats = {"prefills": 0, "chunks": 0, "decode_tokens": 0,
+                      "decode_s": 0.0, "prefill_s": 0.0}
+
+    # ------------------------------------------------------------- compiled
+    def _build_fns(self):
+        cfg, C, counts = self.cfg, self.cache_len, self.trace_counts
+        mla_absorb = self.mla_absorb
+
+        def prefill(params, tokens, length, bank, row):
+            counts["prefill"] += 1          # runs on trace only
+            masks = jax.tree.map(lambda b: b[row][:, None, None], bank)
+            logits, caches, _ = model_lib.forward_seq(
+                params, cfg, {"tokens": tokens}, masks=masks,
+                want_cache=True, cache_len=C)
+            nxt = jnp.take_along_axis(
+                logits, (length - 1)[:, None, None], axis=1)[:, 0]
+            return jnp.argmax(nxt, -1).astype(jnp.int32), caches
+
+        def insert(caches, new, slot):
+            counts["insert"] += 1
+            return jax.tree.map(
+                lambda c, n: jax.lax.dynamic_update_slice_in_dim(
+                    c, n.astype(c.dtype), slot, axis=1), caches, new)
+
+        def decode(params, caches, tok, pos, bank, idx):
+            counts["decode"] += 1
+            # bank leaf (K, R, f) -> per-slot (R, B, 1, f): broadcasts with
+            # the (B, 1, f) hidden activation inside the segment scan
+            masks = jax.tree.map(
+                lambda b: jnp.moveaxis(b[idx], 0, 1)[:, :, None], bank)
+
+            def body(carry, _):
+                cchs, t, p = carry
+                logits, cchs = model_lib.decode_step(
+                    params, cfg, cchs, t, p, masks=masks,
+                    mla_absorb=mla_absorb)
+                nt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+                return (cchs, nt[:, None], p + 1), nt
+            (caches, tok, pos), toks = jax.lax.scan(
+                body, (caches, tok, pos), None, length=self.chunk)
+            return caches, tok, pos, jnp.moveaxis(toks, 0, 1)   # (B, chunk)
+
+        self._prefill = jax.jit(prefill)
+        self._insert = jax.jit(insert)
+        self._decode = jax.jit(decode)
+
+    def _call(self, fn, *args):
+        with shlib.serve_kernels_context(**self._kernels):
+            return fn(*args)
+
+    def _init_caches(self):
+        specs = model_lib.cache_specs(self.cfg, self.B, self.cache_len)
+        return jax.tree.map(
+            lambda s: (jnp.full(s.shape, -1, s.dtype)
+                       if s.dtype == jnp.int32
+                       else jnp.zeros(s.shape, s.dtype)), specs)
+
+    # ------------------------------------------------------------------ API
+    def submit(self, req: ServeRequest) -> int:
+        L = len(req.tokens)
+        if L > self.max_prompt_len or L < 1:
+            raise ValueError(f"prompt length {L} outside "
+                             f"[1, {self.max_prompt_len}]")
+        if self.recurrent and L != self.max_prompt_len:
+            raise ValueError(
+                "recurrent mixers (rwkv/rg-lru) fold right-padding into "
+                f"their state: prompts must be exactly {self.max_prompt_len}"
+                " tokens for this architecture")
+        if not 1 <= req.gen_len <= self.max_gen_len:
+            raise ValueError(f"gen_len {req.gen_len} outside "
+                             f"[1, {self.max_gen_len}]")
+        req.rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(req)
+        return req.rid
+
+    def _admit(self, slot: int, req: ServeRequest):
+        in_use = [s["row"] for s in self.live.values()]
+        row = self.bank.row_for(req.fingerprint(),
+                                lambda: req.masks, in_use=in_use)
+        L = len(req.tokens)
+        toks = np.zeros((1, self.max_prompt_len), np.int32)
+        toks[0, :L] = np.asarray(req.tokens, np.int32)
+        t0 = time.perf_counter()
+        first, cache1 = self._call(
+            self._prefill, self.params, jnp.asarray(toks),
+            jnp.asarray([L], jnp.int32), self.bank.stacked(),
+            jnp.asarray(row, jnp.int32))
+        first = int(first[0])
+        self.stats["prefill_s"] += time.perf_counter() - t0
+        self.stats["prefills"] += 1
+        state = {"req": req, "row": row, "out": [first],
+                 "remaining": req.gen_len - 1}
+        if state["remaining"] > 0:
+            self.caches = self._call(self._insert, self.caches, cache1,
+                                     jnp.asarray(slot, jnp.int32))
+            self.tok[slot, 0] = first
+            self.pos[slot] = L
+            self.row[slot] = row
+            self.live[slot] = state
+            return None
+        return np.asarray(state["out"], np.int32)     # gen_len == 1
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drain the queue; returns {rid: generated tokens (gen_len,)}."""
+        results: Dict[int, np.ndarray] = {}
+        while self.queue or self.live:
+            free = [s for s in range(self.B) if s not in self.live]
+            while self.queue and free:
+                req = self.queue.popleft()
+                done = self._admit(free[0], req)
+                if done is not None:
+                    results[req.rid] = done
+                else:
+                    free.pop(0)
+            if not self.live:
+                continue
+            t0 = time.perf_counter()
+            caches, tok, pos, toks = self._call(
+                self._decode, self.params, self.caches,
+                jnp.asarray(self.tok), jnp.asarray(self.pos),
+                self.bank.stacked(), jnp.asarray(self.row))
+            toks = np.asarray(toks)                    # blocks on the device
+            self.stats["decode_s"] += time.perf_counter() - t0
+            self.stats["chunks"] += 1
+            self.caches = caches
+            self.tok = np.array(tok)       # writable host copies
+            self.pos = np.array(pos)
+            for slot in list(self.live):
+                st = self.live[slot]
+                take = min(self.chunk, st["remaining"])
+                st["out"].extend(toks[slot, :take].tolist())
+                st["remaining"] -= take
+                self.stats["decode_tokens"] += take
+                if st["remaining"] == 0:
+                    results[st["req"].rid] = np.asarray(st["out"], np.int32)
+                    del self.live[slot]
+            # park retired/empty slots at position 0 so their (discarded)
+            # decode activity never ring-wraps the cache
+            for s in range(self.B):
+                if s not in self.live:
+                    self.pos[s] = 0
+                    self.tok[s, 0] = 0
+                    self.row[s] = 0
+        return results
+
+    def summary(self) -> dict:
+        d = dict(self.stats)
+        d["tok_per_s"] = d["decode_tokens"] / max(d["decode_s"], 1e-9)
+        d["trace_counts"] = dict(self.trace_counts)
+        return d

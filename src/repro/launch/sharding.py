@@ -70,6 +70,31 @@ def decode_cache_context(mode: str):
         _STATE.decode_cache = prev
 
 
+def serve_kernel_flags() -> dict:
+    """Which Pallas serving kernels the decode step should trace in:
+    {'ffn': bool, 'attn': bool, 'interpret': bool}. Defaults to all-off —
+    the pure-jnp path — because the kernels only pay off on real TPUs
+    (interpret mode exists for CPU correctness tests, not speed)."""
+    return getattr(_STATE, "serve_kernels",
+                   {"ffn": False, "attn": False, "interpret": True})
+
+
+@contextlib.contextmanager
+def serve_kernels_context(ffn: bool = False, attn: bool = False,
+                          interpret: bool = True):
+    """Opt the serving decode step into the Pallas kernels
+    (kernels/masked_ffn.py masked_ffn_batch, kernels/decode_gqa.py).
+    Same thread-local idiom as decode_cache_context/uniform_pos_context:
+    model code reads the flags at trace time, so the choice is baked into
+    whichever program is being compiled under this context."""
+    prev = serve_kernel_flags()
+    _STATE.serve_kernels = {"ffn": ffn, "attn": attn, "interpret": interpret}
+    try:
+        yield
+    finally:
+        _STATE.serve_kernels = prev
+
+
 def batch_axes(mesh: Mesh):
     names = mesh.axis_names
     return tuple(a for a in ("pod", "data") if a in names)

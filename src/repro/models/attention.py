@@ -14,7 +14,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.launch.sharding import decode_cache_mode, shard, uniform_pos
+from repro.launch.sharding import (decode_cache_mode, serve_kernel_flags,
+                                   shard, uniform_pos)
 from repro.models.layers import apply_rope, cdtype, dense_init, pdtype
 
 Q_CHUNK = 1024
@@ -176,7 +177,17 @@ def attn_decode(p, x, cfg: ModelConfig, cache, slot_pos, pos, window=None):
         cv = jnp.where(upd[:, :, None, None], v_new, cache["v"])
         new_slots = jnp.where(upd, pos[:, None], slot_pos)
 
-    if decode_cache_mode() == "seq":
+    flags = serve_kernel_flags()
+    if (flags["attn"] and window is None and decode_cache_mode() != "seq"):
+        # Pallas flash-decode (kernels/decode_gqa.py). Valid when slots
+        # [0, pos] hold the live positions contiguously — i.e. the cache has
+        # never ring-wrapped — which launch/serving.py guarantees by sizing
+        # cache_len >= prompt_len + gen_len. lengths = pos + 1 then masks
+        # exactly the same set as the slot-based _sdpa mask.
+        from repro.kernels.decode_gqa import decode_gqa
+        out = decode_gqa(q[:, 0], ck, cv, pos + 1,
+                         interpret=flags["interpret"])[:, None]
+    elif decode_cache_mode() == "seq":
         # pin the cache sequence axis to the model axis: scores stay local
         # per C-shard, softmax stats + out psum are the only collectives.
         # Grouped GQA einsum (no KV->H expansion): the cache is the largest

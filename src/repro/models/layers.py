@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.launch.sharding import shard
+from repro.launch.sharding import serve_kernel_flags, shard
 
 
 def cdtype(cfg: ModelConfig):
@@ -133,13 +133,41 @@ def _act(h, kind):
     raise ValueError(kind)
 
 
+_KERNEL_ACT = {"swiglu": ("silu", True), "gelu_gated": ("gelu", True),
+               "gelu": ("gelu", False), "relu": ("relu", False),
+               "relu2": ("relu2", False)}
+
+
+def _ffn_kernel_ok(p, x, cfg, neuron_mask) -> bool:
+    """Pallas masked_ffn_batch applies on the single-token decode shape:
+    per-request masks, no biases, 128-aligned hidden dim."""
+    return (x.ndim == 3 and x.shape[1] == 1
+            and neuron_mask is not None and neuron_mask.ndim == 3
+            and "b_in" not in p
+            and p["w_in"].shape[1] % 128 == 0
+            and cfg.ffn_kind in _KERNEL_ACT)
+
+
 def apply_ffn(p, x, cfg: ModelConfig, neuron_mask=None):
     """FFN with optional neuron mask (Invariant-Dropout masked sub-model).
 
     neuron_mask: (f,) 0/1 — masked neurons contribute nothing; identical in
-    math to physically extracting the sub-model columns.
+    math to physically extracting the sub-model columns. The serving decode
+    step passes per-request masks (B, 1, f) instead and may opt into the
+    tile-skipping Pallas kernel via sharding.serve_kernels_context.
     """
     dt = cdtype(cfg)
+    flags = serve_kernel_flags()
+    if flags["ffn"] and _ffn_kernel_ok(p, x, cfg, neuron_mask):
+        from repro.kernels.masked_ffn import masked_ffn_batch
+        act, gated = _KERNEL_ACT[cfg.ffn_kind]
+        B, _, d = x.shape
+        y = masked_ffn_batch(
+            x.reshape(B, d).astype(dt), p["w_in"].astype(dt),
+            p["w_out"].astype(dt), neuron_mask.reshape(B, -1),
+            w_gate=p["w_gate"].astype(dt) if gated else None,
+            act=act, interpret=flags["interpret"])
+        return shard(y.reshape(B, 1, d), "B", None, None)
     h = jnp.einsum("...d,df->...f", x, p["w_in"].astype(dt))
     if "b_in" in p:
         h = h + p["b_in"].astype(dt)

@@ -51,3 +51,52 @@ def test_policy_invariant_fallback_ordered():
     pol = DropoutPolicy("invariant", SPECS)
     km = pol.keep_map(0.5)          # no stats observed yet
     np.testing.assert_array_equal(km["a"], np.arange(5))
+
+
+# ---------------------------------------------------------------------------
+# policy registry (get_policy / register_policy)
+
+def test_registry_resolves_all_builtins():
+    from repro.core.dropout import available_policies, get_policy
+    assert available_policies() == ("invariant", "ordered", "random")
+    for name in available_policies():
+        pol = get_policy(name, SPECS, seed=1)
+        assert pol.method == name
+        assert len(pol.keep_map(0.5)["a"]) == 5
+
+
+def test_registry_unknown_name_lists_choices():
+    from repro.core.dropout import get_policy
+    with pytest.raises(ValueError, match="invariant"):
+        get_policy("magic", SPECS)
+
+
+def test_registry_filters_foreign_kwargs():
+    from repro.core.dropout import get_policy
+    pol = get_policy("ordered", SPECS, ema_decay=0.9)   # not a field: dropped
+    assert not hasattr(pol, "ema_decay") or pol.method == "ordered"
+    inv = get_policy("invariant", SPECS, ema_decay=0.9)
+    assert inv.ema_decay == 0.9
+
+
+def test_register_policy_plugs_into_table():
+    from repro.core import dropout as dd
+
+    @dd.register_policy("_test_tail")
+    @dd.dataclasses.dataclass
+    class TailPolicy(dd.BasePolicy):
+        def keep(self, name, size, r):
+            return np.arange(size - keep_count(size, r), size)
+    try:
+        pol = dd.get_policy("_test_tail", SPECS)
+        np.testing.assert_array_equal(pol.keep_map(0.5)["a"],
+                                      np.arange(5, 10))
+        assert "_test_tail" in dd.available_policies()
+    finally:
+        del dd._REGISTRY["_test_tail"]
+
+
+def test_dropout_policy_alias_back_compat():
+    from repro.core.dropout import BasePolicy
+    pol = DropoutPolicy("ordered", SPECS, seed=2)
+    assert isinstance(pol, BasePolicy) and pol.method == "ordered"

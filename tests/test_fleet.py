@@ -159,16 +159,78 @@ def test_end_to_end_fleet_matches_sequential_rounds(fleet_sim):
     _tree_close(seq.server.params, flt.server.params, atol=5e-4)
 
 
-def test_heterogeneous_lr_rejected():
-    x = np.zeros((40, 2), np.float32)
-    y = np.zeros((40,), np.int64)
+def test_heterogeneous_lr_and_epochs_match_sequential(fleet_sim):
+    """Per-client (lr, local_epochs) are vmapped data: a mixed cohort still
+    reproduces each client's own sequential run."""
+    model_cls = fleet_sim.model_cls
+    src = fleet_sim.server.engine.clients
+    lrs = [0.004, 0.012, 0.002]
+    epochs = [1, 2, 1]
+    seq, flt = [], []
+    for cid in range(3):
+        c = src[cid]
+        kw = dict(speed=1.0, batch_size=c.batch_size, lr=lrs[cid],
+                  local_epochs=epochs[cid], seed=7)
+        seq.append(SimClient(cid, model_cls, c.x, c.y, **kw))
+        flt.append(FleetClient(cid, model_cls, c.x, c.y, **kw))
+    params = fleet_sim.server.params
+    eng = FleetEngine(model_cls, flt, fleet_sim.server.engine.unit_specs)
+    cohort = eng.run_cohort(params, {})
+    for c, u in zip(seq, cohort.updates()):
+        ref = c.train(params)
+        assert u.sim_time == pytest.approx(ref.sim_time, rel=1e-12)
+        _tree_close(u.delta, ref.delta, atol=2e-5)
 
-    class Tiny:
-        pass
-    a = FleetClient(0, Tiny, x, y, speed=1.0, lr=0.01)
-    b = FleetClient(1, Tiny, x, y, speed=1.0, lr=0.02)
-    with pytest.raises(ValueError, match="uniform"):
-        FleetEngine(Tiny, [a, b], [])
+
+def test_lr_override_uniform_equivalence(fleet_sim):
+    """run_cohort(lr=scalar) == a cohort whose clients all carry that lr,
+    and a (C,)-array override with identical entries matches the scalar."""
+    engine = fleet_sim.server.engine
+    params = fleet_sim.server.params
+
+    def fresh():
+        return FleetEngine(fleet_sim.model_cls, [
+            FleetClient(c.id, fleet_sim.model_cls, c.x, c.y, speed=c.speed,
+                        batch_size=c.batch_size, local_epochs=c.local_epochs,
+                        lr=c.lr, seed=c.seed) for c in engine.clients],
+            engine.unit_specs)
+    a = fresh().run_cohort(params, {}, lr=0.009)
+    b = fresh().run_cohort(params, {},
+                           lr=np.full(len(engine.clients), 0.009))
+    _tree_close(a.deltas, b.deltas, atol=0)
+
+
+def test_n_steps_override_caps_local_steps(fleet_sim):
+    """n_steps zero-weights the tail: capping client 0 to one step equals a
+    client that only had one batch worth of local SGD."""
+    engine = fleet_sim.server.engine
+    params = fleet_sim.server.params
+    clients = [FleetClient(c.id, fleet_sim.model_cls, c.x, c.y, speed=c.speed,
+                           batch_size=c.batch_size,
+                           local_epochs=c.local_epochs, lr=c.lr, seed=c.seed)
+               for c in engine.clients]
+    eng = FleetEngine(fleet_sim.model_cls, clients, engine.unit_specs)
+    caps = eng.client_steps.copy()
+    caps[0] = 1
+    cohort = eng.run_cohort(params, {}, n_steps=caps)
+    # reference: client 0 truncated to one batch (same RNG permutation)
+    c0 = engine.clients[0]
+    ref_c = SimClient(0, fleet_sim.model_cls, c0.x, c0.y, speed=c0.speed,
+                      batch_size=c0.batch_size, local_epochs=c0.local_epochs,
+                      lr=c0.lr, seed=c0.seed)
+    order = ref_c._epoch_order()
+    bs = ref_c.eff_batch_size
+    import jax.numpy as jnp2
+    from repro.fl.client import _train_fn
+    run = _train_fn(fleet_sim.model_cls)
+    xs = jnp2.asarray(c0.x[order[:bs]][None])
+    ys = jnp2.asarray(c0.y[order[:bs]][None])
+    new_p = run(params, xs, ys, c0.lr)
+    want = jax.tree.map(lambda a_, b_: a_ - b_, new_p, params)
+    got = jax.tree.map(lambda d: d[0], cohort.deltas)
+    _tree_close(got, want, atol=2e-5)
+    with pytest.raises(ValueError, match="n_steps"):
+        eng.run_cohort(params, {}, n_steps=np.array([1]))
 
 
 def test_ragged_shards_match_sequential(fleet_sim):

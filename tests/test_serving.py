@@ -1,0 +1,181 @@
+"""Personalized sub-model serving engine (launch/serving.py).
+
+Acceptance contract:
+  * Mask-as-data decode parity — the engine's masked decode reproduces, token
+    for token, a dense forward over params with the sub-model baked into the
+    weights (zeroed in-columns / out-rows), in float32.
+  * One compiled program — a queue mixing >= 3 distinct dropout rates
+    (including 0.0 dropout = full model), ragged prompt lengths, and ragged
+    generation lengths drains with each jitted body traced exactly once.
+  * The Pallas serving kernels (interpret mode on CPU) plug into the same
+    decode step without changing greedy outputs.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.serving import (ServeEngine, ServeRequest,
+                                  apply_masks_to_params, mask_fingerprint,
+                                  rate_masks)
+from repro.models import model as model_lib
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _cfg(arch="stablelm-12b", **over):
+    cfg = get_config(arch).smoke()
+    over.setdefault("dtype", "float32")     # exact parity checks
+    return dataclasses.replace(cfg, **over)
+
+
+def _params(cfg, seed=0):
+    return model_lib.init_params(cfg, jax.random.PRNGKey(seed))
+
+
+def _prompt(cfg, L, seed=0):
+    rng = np.random.RandomState(seed)
+    return rng.randint(0, min(cfg.vocab_size, 256), (L,), dtype=np.int32)
+
+
+def _dense_reference(cfg, params, prompt, gen_len):
+    """Greedy generation via full-sequence re-forward each step — the
+    slowest, most obviously correct decoder."""
+    import jax.numpy as jnp
+    toks = list(np.asarray(prompt, np.int32))
+    out = []
+    for _ in range(gen_len):
+        logits, _, _ = model_lib.forward_seq(
+            params, cfg, {"tokens": jnp.asarray(toks, jnp.int32)[None]})
+        nxt = int(jnp.argmax(logits[0, -1]))
+        out.append(nxt)
+        toks.append(nxt)
+    return np.asarray(out, np.int32)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = _cfg()
+    return cfg, _params(cfg)
+
+
+def test_masked_decode_parity_token_for_token(setup):
+    """Engine decode with mask-as-data == dense decode of the physically
+    masked weights, for r in {1.0, 0.5, 0.25}."""
+    cfg, params = setup
+    prompt = _prompt(cfg, 8)
+    gen = 8
+    for r in (1.0, 0.5, 0.25):
+        masks = None if r >= 1.0 else rate_masks(cfg, r, policy="random",
+                                                 seed=3)
+        eng = ServeEngine(cfg, params, batch_size=2, max_prompt_len=8,
+                          max_gen_len=gen, chunk=4)
+        rid = eng.submit(ServeRequest(prompt, gen_len=gen, masks=masks))
+        got = eng.run()[rid]
+        ref_params = (params if masks is None
+                      else apply_masks_to_params(params, masks, cfg))
+        want = _dense_reference(cfg, ref_params, prompt, gen)
+        np.testing.assert_array_equal(got, want), r
+
+
+def test_mixed_rate_queue_single_compilation(setup):
+    """>= 3 distinct rates (incl. full model), ragged prompts and gen
+    lengths, more requests than slots: drains correctly with exactly one
+    trace of prefill / insert / decode."""
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, batch_size=3, max_prompt_len=8,
+                      max_gen_len=8, chunk=4, bank_size=6)
+    rates = [1.0, 0.5, 0.25, 0.75, 1.0, 0.5, 0.25]
+    lens = [8, 5, 7, 3, 8, 6, 4]
+    gens = [8, 3, 6, 1, 5, 8, 2]
+    reqs = {}
+    for i, (r, L, g) in enumerate(zip(rates, lens, gens)):
+        masks = None if r >= 1.0 else rate_masks(cfg, r, seed=0)
+        prompt = _prompt(cfg, L, seed=i)
+        rid = eng.submit(ServeRequest(prompt, gen_len=g, masks=masks))
+        reqs[rid] = (prompt, g, masks)
+    results = eng.run()
+    assert set(results) == set(reqs)
+    for body in ("prefill", "insert", "decode"):
+        assert eng.trace_counts[body] == 1, (body, eng.trace_counts)
+    # every request's tokens match its own personalized dense reference
+    for rid, (prompt, g, masks) in reqs.items():
+        ref_params = (params if masks is None
+                      else apply_masks_to_params(params, masks, cfg))
+        want = _dense_reference(cfg, ref_params, prompt, g)
+        np.testing.assert_array_equal(results[rid], want), rid
+    assert eng.summary()["tok_per_s"] > 0
+
+
+def test_mask_bank_dedupe_and_eviction(setup):
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, batch_size=2, max_prompt_len=4,
+                      max_gen_len=4, bank_size=3)
+    m1 = rate_masks(cfg, 0.5, seed=0)
+    m1_dup = jax.tree.map(lambda x: x + 0, m1)     # equal values, new arrays
+    m2 = rate_masks(cfg, 0.25, seed=0)
+    m3 = rate_masks(cfg, 0.75, seed=0)
+    assert mask_fingerprint(m1) == mask_fingerprint(m1_dup)
+    for m in (m1, m1_dup, m2, m3, None):
+        eng.submit(ServeRequest(_prompt(cfg, 4), gen_len=2, masks=m))
+    results = eng.run()
+    assert len(results) == 5
+    # capacity 3 (ones + 2): m3 must have evicted a dead row, not grown K
+    assert jax.tree.leaves(eng.bank.stacked())[0].shape[0] == 3
+    assert eng.trace_counts["decode"] == 1
+
+
+def test_prompt_and_gen_length_validation(setup):
+    cfg, params = setup
+    eng = ServeEngine(cfg, params, batch_size=1, max_prompt_len=4,
+                      max_gen_len=4)
+    with pytest.raises(ValueError, match="prompt length"):
+        eng.submit(ServeRequest(_prompt(cfg, 6), gen_len=2))
+    with pytest.raises(ValueError, match="gen_len"):
+        eng.submit(ServeRequest(_prompt(cfg, 3), gen_len=9))
+
+
+def test_encdec_rejected():
+    cfg = get_config("seamless-m4t-large-v2").smoke()
+    with pytest.raises(NotImplementedError):
+        ServeEngine(cfg, None)
+
+
+def test_recurrent_arch_requires_exact_length_prompts():
+    cfg = _cfg("rwkv6-3b")
+    params = _params(cfg)
+    eng = ServeEngine(cfg, params, batch_size=1, max_prompt_len=6,
+                      max_gen_len=4)
+    assert eng.recurrent
+    with pytest.raises(ValueError, match="exactly"):
+        eng.submit(ServeRequest(_prompt(cfg, 3), gen_len=2))
+    rid = eng.submit(ServeRequest(_prompt(cfg, 6), gen_len=4))
+    out = eng.run()[rid]
+    np.testing.assert_array_equal(
+        out, _dense_reference(cfg, params, _prompt(cfg, 6), 4))
+
+
+@pytest.mark.parametrize("kernels", [
+    {"ffn": True, "attn": False, "interpret": True},
+    {"ffn": False, "attn": True, "interpret": True},
+])
+def test_pallas_kernels_match_jnp_decode(setup, kernels):
+    """Serving kernels (interpret mode) slot into the decode step without
+    changing greedy outputs."""
+    cfg, params = setup
+    prompt = _prompt(cfg, 6)
+    masks = rate_masks(cfg, 0.5, seed=1)
+
+    def run(kern):
+        eng = ServeEngine(cfg, params, batch_size=2, max_prompt_len=6,
+                          max_gen_len=4, chunk=4, kernels=kern)
+        rid = eng.submit(ServeRequest(prompt, gen_len=4, masks=masks))
+        rid2 = eng.submit(ServeRequest(prompt, gen_len=4))
+        out = eng.run()
+        return out[rid], out[rid2]
+    a = run(None)
+    b = run(kernels)
+    np.testing.assert_array_equal(a[0], b[0])
+    np.testing.assert_array_equal(a[1], b[1])
