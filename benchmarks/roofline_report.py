@@ -54,9 +54,40 @@ def table(rows):
     return "\n".join(lines)
 
 
+def masked_train_table(path="BENCH_masked_train.json"):
+    """Render BENCH_masked_train.json (benchmarks/masked_train_bench.py)
+    against the roofline FLOP model: one row per dropout rate with the
+    measured dense/kernel step times and `flop_ratio`, the roofline-
+    predicted step-time ratio the compiled-backend gate applies to."""
+    if not os.path.exists(path):
+        return None
+    d = json.load(open(path))
+    g = d["gate"]
+    hdr = (f"{'rate':>5s} {'kept':>5s} {'dense_ms':>9s} {'kernel_ms':>10s} "
+           f"{'meas_ratio':>10s} {'flop_ratio':>10s}")
+    lines = [f"masked-train sweep ({d['model']}; interpret={d['interpret']})",
+             hdr, "-" * len(hdr)]
+    for r in d["results"]:
+        mr = r["measured_ratio_vs_dense_r0"]
+        lines.append(f"{r['rate']:5.2f} {r['kept_neurons']:5d} "
+                     f"{r['dense_ms']:9.3f} {r['kernel_ms']:10.3f} "
+                     f"{(mr if mr is not None else float('nan')):10.3f} "
+                     f"{r['flop_ratio']:10.4f}")
+    lines.append(f"gate: rate {g['rate']} predicted ratio "
+                 f"{g['predicted_kernel_ratio_at_gate_rate']} <= "
+                 f"{g['target_ratio']} ({g['applies_on']})")
+    if d["interpret"]:
+        lines.append("note: " + d["note"])
+    return "\n".join(lines)
+
+
 def main():
     rows = load(sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun")
     print(table(rows))
+    mt = masked_train_table()
+    if mt:
+        print()
+        print(mt)
     # candidates
     fr = [(fmt_row(d)["roofline_frac"], d["arch"], d["shape"]) for d in rows]
     fr.sort()

@@ -172,6 +172,19 @@ def bench_kernel_decode_gqa():
     return us, "B4_H16_C2048;interpret=True"
 
 
+def bench_masked_train():
+    """Dense vs differentiable-kernel cohort step -> BENCH_masked_train.json
+    (full sweep under BENCH_FULL=1; parity-only smoke otherwise)."""
+    from benchmarks.masked_train_bench import sweep
+    t0 = time.perf_counter()
+    rows = (sweep() if FULL else sweep(n_clients=2, per_client=8, iters=1))
+    us = (time.perf_counter() - t0) * 1e6
+    worst = max(r["max_delta_err"] for r in rows)
+    at_half = next(r["flop_ratio"] for r in rows if r["rate"] == 0.5)
+    return us, (f"rates={len(rows)};max_delta_err={worst:.1e};"
+                f"flop_ratio@0.5={at_half}")
+
+
 def bench_roofline_digest():
     from benchmarks.roofline_report import fmt_row, load
     t0 = time.perf_counter()
@@ -220,6 +233,7 @@ BENCHES = [
     ("kernel_masked_ffn", bench_kernel_masked_ffn),
     ("kernel_decode_gqa", bench_kernel_decode_gqa),
     ("kernel_rwkv_chunk", bench_kernel_rwkv_chunk),
+    ("masked_train", bench_masked_train),
     ("roofline_digest", bench_roofline_digest),
 ]
 

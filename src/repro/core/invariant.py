@@ -34,6 +34,18 @@ def _get(tree, path: str):
     return node
 
 
+def _per_unit(arr, axis, tile, size):
+    """Group an array's producer weights by unit: -> (size, -1).
+
+    Mirrors submodel.expand_indices' grammar: tile>0 is tile-major
+    (unit index fastest along the axis), tile<0 is unit-major (each unit
+    owns |tile| contiguous slots — the attention-head layout)."""
+    a = jnp.moveaxis(arr, axis, 0)
+    if tile < 0:
+        return a.reshape(size, -1)
+    return a.reshape(tile, size, -1).transpose(1, 0, 2).reshape(size, -1)
+
+
 def neuron_stats_for_group(prev_tree, new_tree, group,
                            kind: str = "norm") -> jnp.ndarray:
     """Per-neuron relative update statistic over the group's producers.
@@ -49,19 +61,18 @@ def neuron_stats_for_group(prev_tree, new_tree, group,
             w0 = _get(prev_tree, path).astype(jnp.float32)
             w1 = _get(new_tree, path).astype(jnp.float32)
             rel = jnp.abs(w1 - w0) / (jnp.abs(w0) + EPS)
-            rel = jnp.moveaxis(rel, axis, 0).reshape(tile, size, -1)
-            stats = jnp.maximum(stats, rel.max(axis=(0, 2)))
+            rel = _per_unit(rel, axis, tile, size)
+            stats = jnp.maximum(stats, rel.max(axis=1))
         return stats
     num = jnp.zeros((size,), jnp.float32)
     den = jnp.zeros((size,), jnp.float32)
     for path, axis, tile in group["out"]:
         w0 = _get(prev_tree, path).astype(jnp.float32)
         w1 = _get(new_tree, path).astype(jnp.float32)
-        d2 = jnp.square(w1 - w0)
-        d2 = jnp.moveaxis(d2, axis, 0).reshape(tile, size, -1)
-        w2 = jnp.moveaxis(jnp.square(w0), axis, 0).reshape(tile, size, -1)
-        num = num + d2.sum(axis=(0, 2))
-        den = den + w2.sum(axis=(0, 2))
+        d2 = _per_unit(jnp.square(w1 - w0), axis, tile, size)
+        w2 = _per_unit(jnp.square(w0), axis, tile, size)
+        num = num + d2.sum(axis=1)
+        den = den + w2.sum(axis=1)
     return jnp.sqrt(num) / (jnp.sqrt(den) + EPS)
 
 

@@ -35,9 +35,19 @@ def _set(tree, path, value):
 
 
 def expand_indices(keep: np.ndarray, tile: int, size: int) -> np.ndarray:
-    """{t*size + i : t < tile, i in keep} in axis order."""
+    """Kept unit indices -> kept axis indices.
+
+    tile > 0 (tile-major): {t*size + i : t < tile, i in keep} — units are
+    interleaved per tile (conv->FC flatten, LSTM gate blocks).
+    tile < 0 (unit-major): {i*|tile| + t : i in keep, t < |tile|} — each
+    unit owns |tile| *contiguous* slots, the attention-head layout (head
+    index slow, head-dim fast; see models/kernel_models.py and
+    kernels/masked_attn.py). Axis length must equal size * |tile|."""
     if tile == 1:
         return keep
+    if tile < 0:
+        t = -tile
+        return (keep[:, None] * t + np.arange(t)[None, :]).reshape(-1)
     return (np.arange(tile)[:, None] * size + keep[None, :]).reshape(-1)
 
 

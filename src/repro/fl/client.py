@@ -57,6 +57,23 @@ def make_weighted_loss(model_cls):
     return loss
 
 
+def make_weighted_kernel_loss(model_cls, interpret: bool = True):
+    """make_weighted_loss routed through the model's Pallas path.
+
+    Identical weighted cross-entropy, but the forward is
+    `model_cls.apply_kernels(params, xb, kmasks)` — the masked-matmul route
+    of models/kernel_models.py, where dropped 128-blocks/heads are skipped
+    rather than multiplied by zero (DESIGN.md §10). `kmasks` is the small
+    per-group mask dict from `model_cls.kernel_masks`."""
+    def loss(params, xb, yb, wb, kmasks):
+        logits = model_cls.apply_kernels(params, xb, kmasks,
+                                         interpret=interpret)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yb[:, None], axis=-1)[:, 0]
+        return jnp.sum(wb * (lse - gold)) / jnp.maximum(wb.sum(), 1.0)
+    return loss
+
+
 def _train_fn(model_cls):
     key = model_cls.__name__
     if key not in _JIT_CACHE:

@@ -52,9 +52,11 @@ from repro.core import invariant as inv
 from repro.core import submodel as sub
 from repro.core.aggregate import ClientUpdate, aggregate_stacked
 from repro.core.maskbank import MaskBank
-from repro.fl.client import FleetClient, make_weighted_loss
+from repro.fl.client import (FleetClient, make_weighted_kernel_loss,
+                             make_weighted_loss)
+from repro.kernels.ops import _default_interpret
 
-_COHORT_CACHE: Dict[str, callable] = {}
+_COHORT_CACHE: Dict[tuple, callable] = {}
 
 # lax.scan under vmap is pathological on CPU for batched-weight train steps
 # (measured ~6x slower than the identical unrolled program: the loop body
@@ -64,10 +66,21 @@ _FULL_UNROLL_STEPS = 16
 _SCAN_UNROLL = 8
 
 
-def _cohort_fn(model_cls):
-    """One compiled program: vmapped masked local SGD for a whole cohort."""
-    key = model_cls.__name__
+def _cohort_fn(model_cls, use_kernels: bool = False,
+               interpret: bool = True):
+    """One compiled program: vmapped masked local SGD for a whole cohort.
+
+    use_kernels routes every forward/backward through the model's
+    `apply_kernels` Pallas path (models/kernel_models.py): dropped
+    128-blocks/heads are *skipped* via the custom_vjp kernels of
+    DESIGN.md §10 instead of multiplied by zero, so a rate-r straggler does
+    ~r of the FLOPs. Numerically equivalent to the dense path (the skipped
+    activations are act(0) = 0 and the skipped dW tiles are exact zeros) —
+    enforced by tests/test_kernel_grad.py."""
+    key = (model_cls.__name__, use_kernels, interpret)
     if key not in _COHORT_CACHE:
+        if use_kernels:
+            kloss = make_weighted_kernel_loss(model_cls, interpret=interpret)
         loss = make_weighted_loss(model_cls)
 
         @functools.partial(jax.jit, static_argnames=("n_steps",))
@@ -82,10 +95,15 @@ def _cohort_fn(model_cls):
             def one_client(mi, x, y, v, lr):
                 m = jax.tree.map(lambda b: b[mi], mask_bank)
                 w0 = sub.apply_mask(params, m)
+                if use_kernels:
+                    kmasks = model_cls.kernel_masks(m)
 
                 def step(w, batch):
                     xb, yb, vb = batch
-                    g = jax.grad(loss)(w, xb, yb, vb)
+                    if use_kernels:
+                        g = jax.grad(kloss)(w, xb, yb, vb, kmasks)
+                    else:
+                        g = jax.grad(loss)(w, xb, yb, vb)
                     return jax.tree.map(
                         lambda a, ga, ma: a - lr * ma * ga,
                         w, g, m), 0
@@ -153,12 +171,19 @@ class FleetEngine:
     per-client sub-model masks are vmapped data, not program structure.
     """
 
-    def __init__(self, model_cls, clients: Sequence[FleetClient], unit_specs):
+    def __init__(self, model_cls, clients: Sequence[FleetClient], unit_specs,
+                 use_kernels: bool = False):
         self.model_cls = model_cls
         self.clients = list(clients)
         self.unit_specs = unit_specs
+        self.use_kernels = bool(use_kernels)
         if not self.clients:
             raise ValueError("FleetEngine needs at least one client")
+        if self.use_kernels and not hasattr(model_cls, "apply_kernels"):
+            raise ValueError(
+                f"use_kernels=True needs a model exposing apply_kernels / "
+                f"kernel_masks (see models/kernel_models.py); "
+                f"{model_cls.__name__} does not")
         # batch dim pads to the cohort max; smaller shards get sample weights
         self.bs = max(c.eff_batch_size for c in self.clients)
         self.client_steps = np.array(
@@ -166,7 +191,8 @@ class FleetEngine:
              for c in self.clients], np.int32)
         self.steps = int(self.client_steps.max())
         self.lrs = np.array([c.lr for c in self.clients], np.float32)
-        self._run = _cohort_fn(model_cls)
+        self._run = _cohort_fn(model_cls, self.use_kernels,
+                               interpret=_default_interpret())
         self._ones_mask: Optional[dict] = None
         self._stats_jit = None
         self._bank_cache = None        # (fingerprint, bank, idx, n_by_row)

@@ -25,6 +25,7 @@ from repro.data.partition import partition_non_iid
 from repro.data.synthetic import make_dataset
 from repro.fl.client import FleetClient, SimClient
 from repro.fl.fleet import FleetEngine
+from repro.models.kernel_models import KERNEL_MODELS
 from repro.models.small import MODELS
 
 BACKENDS = ("sequential", "fleet")
@@ -33,6 +34,10 @@ WORKLOADS = {
     "femnist": ("femnist", "femnist_cnn", 0.004, 10),
     "cifar10": ("cifar10", "cifar_vgg9", 0.01, 20),
     "shakespeare": ("shakespeare", "shakespeare_lstm", 0.001, 32),
+    # kernel-capable variants: same datasets, models whose masked matmuls
+    # can route through the Pallas kernels (use_kernels=True, fleet only)
+    "femnist_kernel": ("femnist", "kernel_mlp", 0.02, 10),
+    "femnist_attn": ("femnist", "kernel_attn", 0.02, 10),
 }
 
 
@@ -80,9 +85,13 @@ class SimulationConfig:
     speeds: Optional[Dict[int, float]] = None   # None => default_speeds()
     fixed_rate: Optional[float] = None
     straggler_frac: Optional[float] = None
-    seed: int = 0
+    use_kernels: bool = False     # fleet backend: route masked matmuls
+    seed: int = 0                 # through the Pallas kernel path (§10)
 
     def __post_init__(self):
+        if self.use_kernels and self.backend != "fleet":
+            raise ValueError("use_kernels=True requires backend='fleet' "
+                             "(the kernel path lives in the cohort program)")
         if self.workload not in WORKLOADS:
             raise ValueError(f"workload must be one of "
                              f"{tuple(WORKLOADS)}, got {self.workload!r}")
@@ -126,7 +135,8 @@ def default_speeds(n_clients: int, straggler_ids: Sequence[int],
 def _build(cfg: SimulationConfig) -> Simulation:
     co = cfg.cohort
     ds_name, model_name, lr, bs = WORKLOADS[cfg.workload]
-    model_cls = MODELS[model_name]
+    model_cls = (MODELS[model_name] if model_name in MODELS
+                 else KERNEL_MODELS[model_name])
     ds = make_dataset(ds_name, n=co.n_data, n_test=max(400, co.n_data // 5),
                       n_partitions=max(co.n_clients * 2, 16), seed=cfg.seed)
     parts = partition_non_iid(ds, co.n_clients, seed=cfg.seed)
@@ -151,7 +161,8 @@ def _build(cfg: SimulationConfig) -> Simulation:
 
     fcfg = FluidConfig(method=cfg.policy, fixed_rate=cfg.fixed_rate,
                        straggler_frac=cfg.straggler_frac, seed=cfg.seed)
-    engine = (FleetEngine(model_cls, clients, model_cls.UNIT_SPECS)
+    engine = (FleetEngine(model_cls, clients, model_cls.UNIT_SPECS,
+                          use_kernels=cfg.use_kernels)
               if cfg.backend == "fleet" else None)
     server = FluidServer(params, model_cls.UNIT_SPECS, clients, fcfg,
                          eval_fn=eval_fn, engine=engine)

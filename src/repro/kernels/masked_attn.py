@@ -1,0 +1,377 @@
+"""Pallas TPU kernels: head-masked attention projections (DESIGN.md §10).
+
+Invariant dropout at attention granularity drops whole *heads* — the
+head-dim analogue of §2's 128-neuron FFN blocks. A head is the natural
+dropout unit because the Q/K/V projection columns and O-projection rows of
+one head form a closed consumer set: zeroing all four makes the head's
+contribution to the residual stream exactly zero (softmax over the other
+heads is untouched — each head's softmax is independent).
+
+Two kernel shapes cover the four projections:
+
+  * `masked_head_proj`  — x @ W with a per-head column mask (Q, K, V).
+    Grid (m_blocks, H), one head-slab of W per j step; dropped heads skip
+    the matmul and write a zero tile (their output *exists* but is zero —
+    downstream shapes stay static, §8's mask-is-data idiom).
+  * `masked_head_merge` — a @ W_o with a per-head row mask (O). Grid
+    (m_blocks, H) with H innermost and an fp32 accumulator tile, exactly
+    the masked-FFN forward structure minus the activation.
+
+Both are wrapped in `jax.custom_vjp` with Pallas backwards that skip
+dropped heads through the same scalar-prefetch mask path (dW tiles of
+dropped heads are exact zeros by construction). `masked_attention`
+composes them into a full MHA block whose FLOPs — projections *and*
+score/value einsums — scale with the number of kept heads, while
+`kernels/decode_gqa.py` remains the inference-side consumer of the same
+head layout (heads contiguous in the feature dim, `hd` fastest).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _validate_proj(x, w, head_mask, merge: bool):
+    if x.ndim != 2:
+        raise ValueError(f"x must be (M, din), got {x.shape}")
+    if w.ndim != 2 or x.shape[1] != w.shape[0]:
+        raise ValueError(f"w must be ({x.shape[1]}, dout), got {w.shape}")
+    H = head_mask.shape[0] if head_mask.ndim == 1 else -1
+    if head_mask.ndim != 1 or H < 1:
+        raise ValueError(f"head_mask must be (H,) 0/1, got {head_mask.shape}")
+    ax = 0 if merge else 1            # the head-partitioned axis of w
+    if w.shape[ax] % H != 0:
+        raise ValueError(
+            f"w axis {ax} ({w.shape[ax]}) must divide evenly into H={H} "
+            f"heads — the head-masked kernels tile W per head "
+            f"(DESIGN.md §10); pad the projection or fix the mask length")
+
+
+def _proj_kernel(mask_ref, x_ref, w_ref, y_ref):
+    j = pl.program_id(1)
+
+    @pl.when(mask_ref[j] > 0)
+    def _keep():
+        y_ref[...] = jnp.dot(x_ref[...], w_ref[...],
+                             preferred_element_type=jnp.float32
+                             ).astype(y_ref.dtype)
+
+    @pl.when(mask_ref[j] == 0)
+    def _drop():
+        y_ref[...] = jnp.zeros_like(y_ref)
+
+
+def _proj_dx_kernel(mask_ref, g_ref, w_ref, dx_ref, acc_ref, *, n_h):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(mask_ref[j] > 0)
+    def _keep():
+        acc_ref[...] += jnp.dot(g_ref[...], w_ref[...].T,
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_h - 1)
+    def _fin():
+        dx_ref[...] = acc_ref[...].astype(dx_ref.dtype)
+
+
+def _proj_dw_kernel(mask_ref, g_ref, x_ref, dw_ref, acc_ref, *, n_m):
+    j = pl.program_id(0)          # head (outer)
+    i = pl.program_id(1)          # m block (inner: tile revisited)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(mask_ref[j] > 0)
+    def _keep():
+        acc_ref[...] += jnp.dot(x_ref[...].T, g_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(i == n_m - 1)
+    def _fin():
+        dw_ref[...] = acc_ref[...].astype(dw_ref.dtype)
+
+
+def _merge_kernel(mask_ref, a_ref, w_ref, y_ref, acc_ref, *, n_h):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(mask_ref[j] > 0)
+    def _keep():
+        acc_ref[...] += jnp.dot(a_ref[...], w_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_h - 1)
+    def _fin():
+        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
+
+
+def _merge_da_kernel(mask_ref, g_ref, w_ref, da_ref):
+    j = pl.program_id(1)
+
+    @pl.when(mask_ref[j] > 0)
+    def _keep():
+        da_ref[...] = jnp.dot(g_ref[...], w_ref[...].T,
+                              preferred_element_type=jnp.float32
+                              ).astype(da_ref.dtype)
+
+    @pl.when(mask_ref[j] == 0)
+    def _drop():
+        da_ref[...] = jnp.zeros_like(da_ref)
+
+
+def _pad_rows(arr, block_m):
+    pad = (-arr.shape[0]) % block_m
+    if pad:
+        arr = jnp.pad(arr, ((0, pad), (0, 0)))
+    return arr
+
+
+def _call(kernel, tmask, args, grid, in_specs, out_specs, out_shape,
+          scratch, interpret):
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+            out_specs=out_specs, scratch_shapes=scratch),
+        out_shape=out_shape, interpret=interpret)(tmask, *args)
+
+
+@functools.lru_cache(maxsize=None)
+def _proj_vjp(block_m, interpret):
+    def _impl(x, w, mask):
+        M, din = x.shape
+        dout = w.shape[1]
+        H = mask.shape[0]
+        hs = dout // H
+        bm = min(block_m, M)
+        xp = _pad_rows(x, bm)
+        tmask = (mask > 0).astype(jnp.int32)
+        grid = (xp.shape[0] // bm, H)
+        y = _call(
+            _proj_kernel, tmask, [xp, w], grid,
+            [pl.BlockSpec((bm, din), lambda i, j, m: (i, 0)),
+             pl.BlockSpec((din, hs), lambda i, j, m: (0, j))],
+            pl.BlockSpec((bm, hs), lambda i, j, m: (i, j)),
+            jax.ShapeDtypeStruct((xp.shape[0], dout), x.dtype),
+            [], interpret)
+        return y[:M]
+
+    def _dx(gy, x, w, mask):
+        M, din = x.shape
+        dout = w.shape[1]
+        H = mask.shape[0]
+        hs = dout // H
+        bm = min(block_m, M)
+        gp = _pad_rows(gy, bm)
+        tmask = (mask > 0).astype(jnp.int32)
+        grid = (gp.shape[0] // bm, H)
+        dx = _call(
+            functools.partial(_proj_dx_kernel, n_h=H), tmask, [gp, w], grid,
+            [pl.BlockSpec((bm, hs), lambda i, j, m: (i, j)),
+             pl.BlockSpec((din, hs), lambda i, j, m: (0, j))],
+            pl.BlockSpec((bm, din), lambda i, j, m: (i, 0)),
+            jax.ShapeDtypeStruct((gp.shape[0], din), x.dtype),
+            [pltpu.VMEM((bm, din), jnp.float32)], interpret)
+        return dx[:M]
+
+    def _dw(gy, x, w, mask):
+        M, din = x.shape
+        dout = w.shape[1]
+        H = mask.shape[0]
+        hs = dout // H
+        bm = min(block_m, M)
+        gp, xp = _pad_rows(gy, bm), _pad_rows(x, bm)
+        tmask = (mask > 0).astype(jnp.int32)
+        n_m = xp.shape[0] // bm
+        return _call(
+            functools.partial(_proj_dw_kernel, n_m=n_m), tmask, [gp, xp],
+            (H, n_m),
+            [pl.BlockSpec((bm, hs), lambda j, i, m: (i, j)),
+             pl.BlockSpec((bm, din), lambda j, i, m: (i, 0))],
+            pl.BlockSpec((din, hs), lambda j, i, m: (0, j)),
+            jax.ShapeDtypeStruct((din, dout), w.dtype),
+            [pltpu.VMEM((din, hs), jnp.float32)], interpret)
+
+    @jax.custom_vjp
+    def f(x, w, mask):
+        return _impl(x, w, mask)
+
+    def fwd(x, w, mask):
+        return _impl(x, w, mask), (x, w, mask)
+
+    def bwd(res, gy):
+        x, w, mask = res
+        return _dx(gy, x, w, mask), _dw(gy, x, w, mask), jnp.zeros_like(mask)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def _merge_vjp(block_m, interpret):
+    def _impl(a, w, mask):
+        M, dout_in = a.shape
+        d = w.shape[1]
+        H = mask.shape[0]
+        hs = dout_in // H
+        bm = min(block_m, M)
+        ap = _pad_rows(a, bm)
+        tmask = (mask > 0).astype(jnp.int32)
+        grid = (ap.shape[0] // bm, H)
+        y = _call(
+            functools.partial(_merge_kernel, n_h=H), tmask, [ap, w], grid,
+            [pl.BlockSpec((bm, hs), lambda i, j, m: (i, j)),
+             pl.BlockSpec((hs, d), lambda i, j, m: (j, 0))],
+            pl.BlockSpec((bm, d), lambda i, j, m: (i, 0)),
+            jax.ShapeDtypeStruct((ap.shape[0], d), a.dtype),
+            [pltpu.VMEM((bm, d), jnp.float32)], interpret)
+        return y[:M]
+
+    def _da(gy, a, w, mask):
+        M = a.shape[0]
+        d = w.shape[1]
+        H = mask.shape[0]
+        hs = a.shape[1] // H
+        bm = min(block_m, M)
+        gp = _pad_rows(gy, bm)
+        tmask = (mask > 0).astype(jnp.int32)
+        grid = (gp.shape[0] // bm, H)
+        da = _call(
+            _merge_da_kernel, tmask, [gp, w], grid,
+            [pl.BlockSpec((bm, d), lambda i, j, m: (i, 0)),
+             pl.BlockSpec((hs, d), lambda i, j, m: (j, 0))],
+            pl.BlockSpec((bm, hs), lambda i, j, m: (i, j)),
+            jax.ShapeDtypeStruct((gp.shape[0], a.shape[1]), a.dtype),
+            [], interpret)
+        return da[:M]
+
+    def _dw(gy, a, w, mask):
+        M = a.shape[0]
+        d = w.shape[1]
+        H = mask.shape[0]
+        hs = a.shape[1] // H
+        bm = min(block_m, M)
+        gp, ap = _pad_rows(gy, bm), _pad_rows(a, bm)
+        tmask = (mask > 0).astype(jnp.int32)
+        n_m = ap.shape[0] // bm
+        return _call(
+            functools.partial(_proj_dw_kernel, n_m=n_m), tmask, [gp, ap],
+            (H, n_m),
+            [pl.BlockSpec((bm, d), lambda j, i, m: (i, 0)),
+             pl.BlockSpec((bm, hs), lambda j, i, m: (i, j))],
+            pl.BlockSpec((hs, d), lambda j, i, m: (j, 0)),
+            jax.ShapeDtypeStruct((a.shape[1], d), w.dtype),
+            [pltpu.VMEM((hs, d), jnp.float32)], interpret)
+
+    @jax.custom_vjp
+    def f(a, w, mask):
+        return _impl(a, w, mask)
+
+    def fwd(a, w, mask):
+        return _impl(a, w, mask), (a, w, mask)
+
+    def bwd(res, gy):
+        a, w, mask = res
+        # dW_o = a_masked^T @ gy per head; _proj_dw_kernel's x.T @ g with
+        # (x=a-slab, g=gy) is exactly that — dropped-head rows stay zero.
+        return _da(gy, a, w, mask), _dw(gy, a, w, mask), jnp.zeros_like(mask)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def masked_head_proj(x, w, head_mask, *, block_m: int = 128,
+                     interpret: bool = True):
+    """Head-masked input projection ``y = x @ w`` (Q/K/V side).
+
+    Shapes/dtypes: ``x`` (M, din) float32/bf16; ``w`` (din, H*hd) with
+    heads laid out contiguously, head-dim fastest (the
+    `kernels/decode_gqa.py` layout); ``head_mask`` (H,) 0/1 (int or
+    float). Returns (M, H*hd) in ``x.dtype`` — dropped heads' columns are
+    exact zeros, kept by skipping (not multiplying).
+    Granularity/padding: the mask is per-HEAD; H must divide w.shape[1]
+    (ValueError otherwise). M pads internally to ``block_m``. For compiled
+    TPU lowering hd should be a multiple of 128 (lane width); interpret
+    mode accepts any hd. Differentiable: custom_vjp with Pallas dx/dW
+    kernels; dW head-slabs of dropped heads are exact zeros."""
+    _validate_proj(x, w, head_mask, merge=False)
+    f = _proj_vjp(block_m, interpret)
+    return f(x, w, head_mask.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "interpret"))
+def masked_head_merge(a, w, head_mask, *, block_m: int = 128,
+                      interpret: bool = True):
+    """Head-masked output merge ``y = a @ w`` (O-projection side).
+
+    Shapes/dtypes: ``a`` (M, H*hd) per-head attention outputs (decode_gqa
+    layout, head-dim fastest); ``w`` (H*hd, d); ``head_mask`` (H,) 0/1.
+    Returns (M, d) in ``a.dtype``, accumulating only over kept heads (fp32
+    accumulator, H innermost in the grid).
+    Granularity/padding: per-head mask; H must divide a.shape[1]
+    (ValueError otherwise); M pads internally to ``block_m``; hd should be
+    128-aligned for compiled TPU lowering. Differentiable: custom_vjp with
+    Pallas da/dW kernels; dW rows of dropped heads are exact zeros."""
+    _validate_proj(a, w, head_mask, merge=True)
+    f = _merge_vjp(block_m, interpret)
+    return f(a, w, head_mask.astype(jnp.float32))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_heads", "block_m", "interpret"))
+def masked_attention(x, wq, wk, wv, wo, head_mask, *, n_heads: int,
+                     block_m: int = 128, interpret: bool = True):
+    """Head-masked multi-head self-attention (training-side composition).
+
+    Shapes/dtypes: ``x`` (B, S, d); ``wq``/``wk``/``wv`` (d, H*hd);
+    ``wo`` (H*hd, d); ``head_mask`` (H,) 0/1 with ``H == n_heads``.
+    Returns (B, S, d) in ``x.dtype``.
+
+    Q/K/V run through `masked_head_proj` (dropped heads project to zero
+    without touching the MXU), causal softmax attention runs per head in
+    plain jnp — each head's softmax is independent, so dropped heads
+    produce v=0 ⇒ per-head output 0 regardless of their (garbage-free,
+    all-zero) scores — and `masked_head_merge` accumulates only kept heads
+    into the residual. Equivalent to dense attention over
+    `head_mask ⊙ params` (column/row head-slabs zeroed), gradient
+    included: tested in tests/test_kernel_grad.py. FLOPs scale with kept
+    heads in every matmul except the (cheap) softmax normalizers.
+    Padding: S pads to ``block_m`` internally; hd should be 128-aligned
+    for compiled TPU lowering."""
+    if head_mask.shape != (n_heads,):
+        raise ValueError(f"head_mask must be (n_heads={n_heads},), "
+                         f"got {head_mask.shape}")
+    B, S, d = x.shape
+    H = n_heads
+    hd = wq.shape[1] // H
+    x2 = x.reshape(B * S, d)
+    q = masked_head_proj(x2, wq, head_mask, block_m=block_m,
+                         interpret=interpret).reshape(B, S, H, hd)
+    k = masked_head_proj(x2, wk, head_mask, block_m=block_m,
+                         interpret=interpret).reshape(B, S, H, hd)
+    v = masked_head_proj(x2, wv, head_mask, block_m=block_m,
+                         interpret=interpret).reshape(B, S, H, hd)
+    scores = jnp.einsum("bqhe,bkhe->bhqk", q, k) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    scores = jnp.where(causal[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhqk,bkhe->bqhe", probs, v).reshape(B * S, H * hd)
+    out = masked_head_merge(ctx, wo, head_mask, block_m=block_m,
+                            interpret=interpret)
+    return out.reshape(B, S, d)

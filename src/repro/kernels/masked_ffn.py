@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: block-masked FFN forward (Invariant-Dropout sub-model).
+"""Pallas TPU kernels: block-masked FFN, forward AND backward (DESIGN.md §2, §10).
 
 Computes   y = (act(x @ W_in) [* act(x @ W_gate)]) ⊙ mask) @ W_out
 where the neuron mask has 128-block granularity (DESIGN.md §2: the
@@ -7,9 +7,27 @@ every surviving matmul tile MXU-shaped). Dropped blocks SKIP both matmuls
 via ``pl.when``, so a straggler running a sub-model of size r does ~r of the
 FFN FLOPs *without re-compiling per mask* — the mask is a runtime input.
 
-Grid: (m_blocks, f_blocks); f (the masked hidden dim) is innermost so the
-fp32 accumulator tile in VMEM is revisited. The block mask is a
-scalar-prefetch operand (SMEM) because it drives control flow.
+Both public entry points (`masked_ffn`, `masked_ffn_batch`) are wrapped in
+``jax.custom_vjp`` with Pallas backward kernels that exploit the same
+invariant-dropout structure (DESIGN.md §10):
+
+  * dL/dW_in, dL/dW_gate columns and dL/dW_out rows of a dropped block are
+    zero **by construction** (the forward never touched them), so the dW
+    kernel only visits kept tiles and writes zeros elsewhere.
+  * dL/dx only accumulates contributions from kept blocks, so the dx kernel
+    skips dropped tiles exactly like the forward.
+
+Both backward kernels recompute the hidden pre-activations from the saved
+inputs (no activation residuals — the memory-light "recompute" policy), and
+route tile skipping through the identical scalar-prefetch mask path as the
+forward, so a rate-r sub-model pays ~r of the FLOPs in the *whole* train
+step, not just inference.
+
+Grid layout: forward and dx use (m_blocks, f_blocks) with f (the masked
+hidden dim) innermost so the fp32 accumulator tile in VMEM is revisited;
+the dW kernel transposes the grid to (f_blocks, m_blocks) so each weight
+tile's accumulator sees its m-visits consecutively. Block masks are
+scalar-prefetch operands (SMEM) because they drive control flow.
 """
 from __future__ import annotations
 
@@ -22,42 +40,72 @@ from jax.experimental.pallas import tpu as pltpu
 
 BLOCK_NEURONS = 128
 
-
-def _kernel(mask_ref, x_ref, win_ref, wgate_ref, wout_ref, y_ref, acc_ref,
-            *, n_f_blocks, act):
-    j = pl.program_id(1)
-
-    @pl.when(j == 0)
-    def _init():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    @pl.when(mask_ref[j] > 0)
-    def _block():
-        x = x_ref[...]
-        h = jnp.dot(x, win_ref[...],
-                    preferred_element_type=jnp.float32)
-        if wgate_ref is not None:
-            g = jnp.dot(x, wgate_ref[...],
-                        preferred_element_type=jnp.float32)
-            h = act(g) * h
-        else:
-            h = act(h)
-        acc_ref[...] += jnp.dot(h.astype(x.dtype), wout_ref[...],
-                                preferred_element_type=jnp.float32)
-
-    @pl.when(j == n_f_blocks - 1)
-    def _finalize():
-        y_ref[...] = acc_ref[...].astype(y_ref.dtype)
-
-
 _ACTS = {"relu": lambda h: jnp.maximum(h, 0.0),
          "relu2": lambda h: jnp.square(jnp.maximum(h, 0.0)),
          "gelu": jax.nn.gelu,
          "silu": jax.nn.silu}
 
 
-def _kernel_batch(tmask_ref, x_ref, mask_ref, win_ref, wgate_ref, wout_ref,
-                  y_ref, acc_ref, *, n_f_blocks, act):
+def _dgelu(z):
+    # derivative of jax.nn.gelu's default tanh approximation
+    c = 0.7978845608028654            # sqrt(2/pi)
+    u = c * (z + 0.044715 * z * z * z)
+    t = jnp.tanh(u)
+    du = c * (1.0 + 3 * 0.044715 * z * z)
+    return 0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * du
+
+
+def _dsilu(z):
+    s = jax.nn.sigmoid(z)
+    return s * (1.0 + z * (1.0 - s))
+
+
+_DACTS = {"relu": lambda z: (z > 0).astype(z.dtype),
+          "relu2": lambda z: 2.0 * jnp.maximum(z, 0.0),
+          "gelu": _dgelu,
+          "silu": _dsilu}
+
+
+# ---------------------------------------------------------------------------
+# shape validation (the silent-dense footgun fix: reject mis-tiled inputs
+# loudly instead of silently computing something block-misaligned)
+
+def _validate(x, w_in, w_out, w_gate, mask, per_row: bool):
+    if x.ndim != 2:
+        raise ValueError(f"x must be (M, d), got shape {x.shape}")
+    M, d = x.shape
+    if w_in.ndim != 2 or w_in.shape[0] != d:
+        raise ValueError(f"w_in must be (d={d}, F), got {w_in.shape}")
+    F = w_in.shape[1]
+    if F % BLOCK_NEURONS != 0:
+        raise ValueError(
+            f"masked FFN hidden dim F={F} must be a multiple of "
+            f"BLOCK_NEURONS={BLOCK_NEURONS}; pad w_in/w_out (and the mask) "
+            f"to 128 alignment — anything else would mis-tile the block "
+            f"skip (DESIGN.md §10)")
+    if w_out.shape != (F, d):
+        raise ValueError(f"w_out must be (F={F}, d={d}), got {w_out.shape}")
+    if w_gate is not None and w_gate.shape != (d, F):
+        raise ValueError(f"w_gate must be (d={d}, F={F}), got {w_gate.shape}")
+    if per_row:
+        if mask.shape != (M, F):
+            raise ValueError(
+                f"row_mask must be (M={M}, F={F}) — one 0/1 neuron mask per "
+                f"row of x — got {mask.shape}")
+    else:
+        if mask.shape != (F // BLOCK_NEURONS,):
+            raise ValueError(
+                f"block_mask must be (F//{BLOCK_NEURONS},) = "
+                f"({F // BLOCK_NEURONS},) — one 0/1 entry per 128-neuron "
+                f"block — got {mask.shape}. For neuron-granular masks use "
+                f"masked_ffn_batch (per-row masks) instead")
+
+
+# ---------------------------------------------------------------------------
+# forward kernels (unchanged math; see module docstring)
+
+def _fwd_kernel(mask_ref, x_ref, rm_ref, win_ref, wgate_ref, wout_ref,
+                y_ref, acc_ref, *, n_f_blocks, act, per_row):
     i = pl.program_id(0)
     j = pl.program_id(1)
 
@@ -65,18 +113,19 @@ def _kernel_batch(tmask_ref, x_ref, mask_ref, win_ref, wgate_ref, wout_ref,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    @pl.when(tmask_ref[i * n_f_blocks + j] > 0)
+    keep = mask_ref[i * n_f_blocks + j] if per_row else mask_ref[j]
+
+    @pl.when(keep > 0)
     def _block():
         x = x_ref[...]
-        h = jnp.dot(x, win_ref[...],
-                    preferred_element_type=jnp.float32)
+        h = jnp.dot(x, win_ref[...], preferred_element_type=jnp.float32)
         if wgate_ref is not None:
-            g = jnp.dot(x, wgate_ref[...],
-                        preferred_element_type=jnp.float32)
+            g = jnp.dot(x, wgate_ref[...], preferred_element_type=jnp.float32)
             h = act(g) * h
         else:
             h = act(h)
-        h = h * mask_ref[...].astype(jnp.float32)
+        if rm_ref is not None:
+            h = h * rm_ref[...].astype(jnp.float32)
         acc_ref[...] += jnp.dot(h.astype(x.dtype), wout_ref[...],
                                 preferred_element_type=jnp.float32)
 
@@ -85,48 +134,187 @@ def _kernel_batch(tmask_ref, x_ref, mask_ref, win_ref, wgate_ref, wout_ref,
         y_ref[...] = acc_ref[...].astype(y_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("act", "block_m", "interpret"))
-def masked_ffn(x, w_in, w_out, block_mask, w_gate=None, *, act: str = "silu",
-               block_m: int = 128, interpret: bool = True):
-    """x: (M, d); w_in[, w_gate]: (d, F); w_out: (F, d);
-    block_mask: (F // 128,) int32 (1 = keep block, 0 = dropped).
-    Returns y: (M, d) in x.dtype. F must be a multiple of 128."""
+# ---------------------------------------------------------------------------
+# backward kernels
+#
+# Shared recompute helper: given the x / g tiles and the j-th weight blocks,
+# produce (hm, dzh, dzg) where hm is the masked hidden activation tile and
+# dzh / dzg are the cotangents of the pre-activations. All fp32.
+
+def _bwd_core(x, g, rm, win, wgate, wout, act, dact):
+    zh = jnp.dot(x, win, preferred_element_type=jnp.float32)
+    ghm = jnp.dot(g, wout.T, preferred_element_type=jnp.float32)
+    if rm is not None:
+        rmf = rm.astype(jnp.float32)
+        ghm = ghm * rmf
+    if wgate is not None:
+        zg = jnp.dot(x, wgate, preferred_element_type=jnp.float32)
+        a = act(zg)
+        hm = a * zh
+        dzh = ghm * a
+        dzg = ghm * zh * dact(zg)
+    else:
+        hm = act(zh)
+        dzh = ghm * dact(zh)
+        dzg = None
+    if rm is not None:
+        hm = hm * rmf
+    return hm, dzh, dzg
+
+
+def _dx_kernel(mask_ref, g_ref, x_ref, rm_ref, win_ref, wgate_ref, wout_ref,
+               dx_ref, acc_ref, *, n_f_blocks, act, dact, per_row):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    keep = mask_ref[i * n_f_blocks + j] if per_row else mask_ref[j]
+
+    @pl.when(keep > 0)
+    def _block():
+        rm = rm_ref[...] if rm_ref is not None else None
+        wg = wgate_ref[...] if wgate_ref is not None else None
+        _, dzh, dzg = _bwd_core(x_ref[...], g_ref[...], rm, win_ref[...],
+                                wg, wout_ref[...], act, dact)
+        acc_ref[...] += jnp.dot(dzh, win_ref[...].T,
+                                preferred_element_type=jnp.float32)
+        if wgate_ref is not None:
+            acc_ref[...] += jnp.dot(dzg, wgate_ref[...].T,
+                                    preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_f_blocks - 1)
+    def _finalize():
+        dx_ref[...] = acc_ref[...].astype(dx_ref.dtype)
+
+
+def _dw_kernel(mask_ref, g_ref, x_ref, rm_ref, win_ref, wgate_ref, wout_ref,
+               dwin_ref, dwout_ref, dwgate_ref,
+               ain_ref, aout_ref, agate_ref, *, n_m_blocks, n_f_blocks,
+               act, dact, per_row):
+    j = pl.program_id(0)          # f block (outer: each dW tile is visited
+    i = pl.program_id(1)          # m block (inner) for all its m-steps)
+
+    @pl.when(i == 0)
+    def _init():
+        ain_ref[...] = jnp.zeros_like(ain_ref)
+        aout_ref[...] = jnp.zeros_like(aout_ref)
+        if agate_ref is not None:
+            agate_ref[...] = jnp.zeros_like(agate_ref)
+
+    keep = mask_ref[i * n_f_blocks + j] if per_row else mask_ref[j]
+
+    @pl.when(keep > 0)
+    def _block():
+        x = x_ref[...]
+        g = g_ref[...]
+        rm = rm_ref[...] if rm_ref is not None else None
+        wg = wgate_ref[...] if wgate_ref is not None else None
+        hm, dzh, dzg = _bwd_core(x, g, rm, win_ref[...], wg, wout_ref[...],
+                                 act, dact)
+        ain_ref[...] += jnp.dot(x.T, dzh, preferred_element_type=jnp.float32)
+        aout_ref[...] += jnp.dot(hm.T, g.astype(jnp.float32),
+                                 preferred_element_type=jnp.float32)
+        if agate_ref is not None:
+            agate_ref[...] += jnp.dot(x.T, dzg,
+                                      preferred_element_type=jnp.float32)
+
+    @pl.when(i == n_m_blocks - 1)
+    def _finalize():
+        # dropped blocks: the accumulators were never touched => exact zeros,
+        # the invariant-dropout structural guarantee of DESIGN.md §10.
+        dwin_ref[...] = ain_ref[...].astype(dwin_ref.dtype)
+        dwout_ref[...] = aout_ref[...].astype(dwout_ref.dtype)
+        if dwgate_ref is not None:
+            dwgate_ref[...] = agate_ref[...].astype(dwgate_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# pallas_call assembly
+
+def _adapt(kernel, has_rm, has_gate, n_fixed=3):
+    """Inject None for the absent optional refs (row_mask / w_gate /
+    dw_gate+its scratch) so one kernel body serves all variants."""
+    def fn(*refs):
+        it = iter(refs)
+        head = [next(it) for _ in range(n_fixed)]          # mask, g?, x...
+        rm = next(it) if has_rm else None
+        win = next(it)
+        wg = next(it) if has_gate else None
+        wout = next(it)
+        rest = list(it)
+        return kernel(*head, rm, win, wg, wout, *rest)
+    return fn
+
+
+def _pad_rows(arr, block_m):
+    pad = (-arr.shape[0]) % block_m
+    if pad:
+        arr = jnp.pad(arr, ((0, pad),) + ((0, 0),) * (arr.ndim - 1))
+    return arr
+
+
+def _prefetch_mask(mask, M, F, block_m, per_row):
+    """int32 tile-skip vector for scalar prefetch. per_row: OR-reduce over
+    the rows of each (m, f) tile — a tile runs iff ANY row keeps ANY neuron
+    of the block; flat layout [i * n_f + j]."""
+    n_f = F // BLOCK_NEURONS
+    if per_row:
+        mp = _pad_rows(mask, block_m)
+        grid_m = mp.shape[0] // block_m
+        return (mp.reshape(grid_m, block_m, n_f, BLOCK_NEURONS)
+                .max(axis=(1, 3)) > 0).astype(jnp.int32).reshape(-1)
+    return (mask > 0).astype(jnp.int32)
+
+
+def _io_specs(d, block_m, gated, per_row, with_g):
+    """BlockSpecs for the (g?, x, rm?, w_in, w_gate?, w_out) operand tail
+    shared by all three kernels (index maps in (i=m, j=f) grid order)."""
+    specs = []
+    if with_g:
+        specs.append(pl.BlockSpec((block_m, d), lambda i, j, m: (i, 0)))
+    specs.append(pl.BlockSpec((block_m, d), lambda i, j, m: (i, 0)))
+    if per_row:
+        specs.append(pl.BlockSpec((block_m, BLOCK_NEURONS),
+                                  lambda i, j, m: (i, j)))
+    specs.append(pl.BlockSpec((d, BLOCK_NEURONS), lambda i, j, m: (0, j)))
+    if gated:
+        specs.append(pl.BlockSpec((d, BLOCK_NEURONS), lambda i, j, m: (0, j)))
+    specs.append(pl.BlockSpec((BLOCK_NEURONS, d), lambda i, j, m: (j, 0)))
+    return specs
+
+
+def _fwd_impl(x, w_in, w_out, w_gate, mask, *, act, block_m, interpret,
+              per_row):
     M, d = x.shape
     F = w_in.shape[1]
-    assert F % BLOCK_NEURONS == 0 and block_mask.shape == (F // BLOCK_NEURONS,)
     block_m = min(block_m, M)
-    pad_m = (-M) % block_m
-    if pad_m:
-        x = jnp.pad(x, ((0, pad_m), (0, 0)))
+    tmask = _prefetch_mask(mask, M, F, block_m, per_row)
+    x = _pad_rows(x, block_m)
     MP = x.shape[0]
-    grid = (MP // block_m, F // BLOCK_NEURONS)
+    n_f = F // BLOCK_NEURONS
+    grid = (MP // block_m, n_f)
 
-    gate_specs = []
-    args = [block_mask.astype(jnp.int32), x, w_in]
+    args = [tmask, x]
+    if per_row:
+        args.append(_pad_rows(mask, block_m).astype(x.dtype))
+    args.append(w_in)
     if w_gate is not None:
         args.append(w_gate)
-        gate_specs = [pl.BlockSpec((d, BLOCK_NEURONS), lambda i, j, m: (0, j))]
     args.append(w_out)
 
-    kernel = functools.partial(
-        _kernel, n_f_blocks=grid[1], act=_ACTS[act])
-    if w_gate is None:
-        kernel_fn = lambda m, xr, wi, wo, y, a: kernel(m, xr, wi, None, wo,
-                                                       y, a)
-    else:
-        kernel_fn = kernel
-
+    kernel = _adapt(functools.partial(_fwd_kernel, n_f_blocks=n_f,
+                                      act=_ACTS[act], per_row=per_row),
+                    has_rm=per_row, has_gate=w_gate is not None, n_fixed=2)
     y = pl.pallas_call(
-        kernel_fn,
+        kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=1,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((block_m, d), lambda i, j, m: (i, 0)),
-                pl.BlockSpec((d, BLOCK_NEURONS), lambda i, j, m: (0, j)),
-                *gate_specs,
-                pl.BlockSpec((BLOCK_NEURONS, d), lambda i, j, m: (j, 0)),
-            ],
+            in_specs=_io_specs(d, block_m, w_gate is not None, per_row,
+                               with_g=False),
             out_specs=pl.BlockSpec((block_m, d), lambda i, j, m: (i, 0)),
             scratch_shapes=[pltpu.VMEM((block_m, d), jnp.float32)],
         ),
@@ -134,76 +322,195 @@ def masked_ffn(x, w_in, w_out, block_mask, w_gate=None, *, act: str = "silu",
         interpret=interpret,
     )(*args)
     return y[:M]
+
+
+def _dx_impl(gy, x, w_in, w_out, w_gate, mask, *, act, block_m, interpret,
+             per_row):
+    M, d = x.shape
+    F = w_in.shape[1]
+    block_m = min(block_m, M)
+    tmask = _prefetch_mask(mask, M, F, block_m, per_row)
+    gy = _pad_rows(gy, block_m)
+    x = _pad_rows(x, block_m)
+    MP = x.shape[0]
+    n_f = F // BLOCK_NEURONS
+    grid = (MP // block_m, n_f)
+
+    args = [tmask, gy, x]
+    if per_row:
+        args.append(_pad_rows(mask, block_m).astype(x.dtype))
+    args.append(w_in)
+    if w_gate is not None:
+        args.append(w_gate)
+    args.append(w_out)
+
+    kernel = _adapt(functools.partial(_dx_kernel, n_f_blocks=n_f,
+                                      act=_ACTS[act], dact=_DACTS[act],
+                                      per_row=per_row),
+                    has_rm=per_row, has_gate=w_gate is not None, n_fixed=3)
+    dx = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=_io_specs(d, block_m, w_gate is not None, per_row,
+                               with_g=True),
+            out_specs=pl.BlockSpec((block_m, d), lambda i, j, m: (i, 0)),
+            scratch_shapes=[pltpu.VMEM((block_m, d), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((MP, d), x.dtype),
+        interpret=interpret,
+    )(*args)
+    return dx[:M]
+
+
+def _dw_impl(gy, x, w_in, w_out, w_gate, mask, *, act, block_m, interpret,
+             per_row):
+    M, d = x.shape
+    F = w_in.shape[1]
+    block_m = min(block_m, M)
+    tmask = _prefetch_mask(mask, M, F, block_m, per_row)
+    gy = _pad_rows(gy, block_m)
+    x = _pad_rows(x, block_m)
+    MP = x.shape[0]
+    n_f = F // BLOCK_NEURONS
+    gated = w_gate is not None
+    grid = (n_f, MP // block_m)                      # f outer, m inner
+
+    args = [tmask, gy, x]
+    if per_row:
+        args.append(_pad_rows(mask, block_m).astype(x.dtype))
+    args.append(w_in)
+    if gated:
+        args.append(w_gate)
+    args.append(w_out)
+
+    # reuse the (i=m, j=f) index maps by swapping grid coordinates
+    base = _io_specs(d, block_m, gated, per_row, with_g=True)
+    in_specs = [pl.BlockSpec(s.block_shape,
+                             functools.partial(
+                                 lambda j, i, m, f=s.index_map: f(i, j, m)))
+                for s in base]
+
+    out_shapes = [jax.ShapeDtypeStruct((d, F), w_in.dtype),
+                  jax.ShapeDtypeStruct((F, d), w_out.dtype)]
+    out_specs = [pl.BlockSpec((d, BLOCK_NEURONS), lambda j, i, m: (0, j)),
+                 pl.BlockSpec((BLOCK_NEURONS, d), lambda j, i, m: (j, 0))]
+    scratch = [pltpu.VMEM((d, BLOCK_NEURONS), jnp.float32),
+               pltpu.VMEM((BLOCK_NEURONS, d), jnp.float32)]
+    if gated:
+        out_shapes.append(jax.ShapeDtypeStruct((d, F), w_gate.dtype))
+        out_specs.append(pl.BlockSpec((d, BLOCK_NEURONS),
+                                      lambda j, i, m: (0, j)))
+        scratch.append(pltpu.VMEM((d, BLOCK_NEURONS), jnp.float32))
+
+    body = functools.partial(_dw_kernel, n_m_blocks=grid[1], n_f_blocks=n_f,
+                             act=_ACTS[act], dact=_DACTS[act],
+                             per_row=per_row)
+
+    def kernel_fn(*refs):
+        it = iter(refs)
+        tm, g, xr = next(it), next(it), next(it)
+        rm = next(it) if per_row else None
+        win = next(it)
+        wg = next(it) if gated else None
+        wout = next(it)
+        dwin, dwout = next(it), next(it)
+        dwg = next(it) if gated else None
+        ain, aout = next(it), next(it)
+        ag = next(it) if gated else None
+        return body(tm, g, xr, rm, win, wg, wout, dwin, dwout, dwg,
+                    ain, aout, ag)
+
+    out = pl.pallas_call(
+        kernel_fn,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            scratch_shapes=scratch,
+        ),
+        out_shape=tuple(out_shapes),
+        interpret=interpret,
+    )(*args)
+    dwin, dwout = out[0], out[1]
+    dwgate = out[2] if gated else None
+    return dwin, dwout, dwgate
+
+
+@functools.lru_cache(maxsize=None)
+def _differentiable(act, block_m, interpret, per_row):
+    """custom_vjp-wrapped masked FFN, cached per static config.
+
+    The mask primal rides through the vjp as float32; its cotangent is a
+    symbolic zero (the mask is sub-model structure, not a trained weight)."""
+    kw = dict(act=act, block_m=block_m, interpret=interpret, per_row=per_row)
+
+    @jax.custom_vjp
+    def f(x, w_in, w_out, w_gate, mask):
+        return _fwd_impl(x, w_in, w_out, w_gate, mask, **kw)
+
+    def fwd(x, w_in, w_out, w_gate, mask):
+        return (_fwd_impl(x, w_in, w_out, w_gate, mask, **kw),
+                (x, w_in, w_out, w_gate, mask))
+
+    def bwd(res, gy):
+        x, w_in, w_out, w_gate, mask = res
+        dx = _dx_impl(gy, x, w_in, w_out, w_gate, mask, **kw)
+        dwin, dwout, dwgate = _dw_impl(gy, x, w_in, w_out, w_gate, mask, **kw)
+        return dx, dwin, dwout, dwgate, jnp.zeros_like(mask)
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+
+@functools.partial(jax.jit, static_argnames=("act", "block_m", "interpret"))
+def masked_ffn(x, w_in, w_out, block_mask, w_gate=None, *, act: str = "silu",
+               block_m: int = 128, interpret: bool = True):
+    """Block-masked FFN, differentiable (custom_vjp, Pallas backward).
+
+    Shapes/dtypes: ``x`` (M, d) float32/bf16; ``w_in`` [, ``w_gate``]
+    (d, F); ``w_out`` (F, d); returns (M, d) in ``x.dtype``.
+    Mask granularity: ``block_mask`` is (F // 128,) 0/1 (int or float) —
+    one entry per 128-neuron block; dropped blocks are skipped entirely in
+    forward, dx, and dW (whose dropped tiles are exact zeros).
+    Padding/alignment: F must be a multiple of 128 (ValueError otherwise —
+    never a silent dense fallback); M is padded internally to ``block_m``.
+    ``jax.grad`` through this function matches the dense ``mask ⊙ params``
+    reference to fp32 tolerance (tests/test_kernel_grad.py)."""
+    _validate(x, w_in, w_out, w_gate, block_mask, per_row=False)
+    f = _differentiable(act, block_m, interpret, per_row=False)
+    return f(x, w_in, w_out, w_gate, block_mask.astype(jnp.float32))
 
 
 @functools.partial(jax.jit, static_argnames=("act", "block_m", "interpret"))
 def masked_ffn_batch(x, w_in, w_out, row_mask, w_gate=None, *,
                      act: str = "silu", block_m: int = 8,
                      interpret: bool = True):
-    """Per-ROW-masked FFN — the serving decode variant, where each row of x
-    is a different request carrying its own sub-model mask.
+    """Per-ROW-masked FFN, differentiable — the serving/fleet variant where
+    each row of x carries its own sub-model mask.
 
-    x: (M, d); w_in[, w_gate]: (d, F); w_out: (F, d); row_mask: (M, F) 0/1.
-    Returns y: (M, d) in x.dtype. F must be a multiple of 128.
+    Shapes/dtypes: ``x`` (M, d); ``w_in`` [, ``w_gate``] (d, F); ``w_out``
+    (F, d); ``row_mask`` (M, F) 0/1 (neuron-granular, any pattern — exact,
+    not rounded to blocks). Returns (M, d) in ``x.dtype``.
+    Padding/alignment: F must be a multiple of 128 (ValueError otherwise);
+    M pads internally to ``block_m`` with zero mask rows.
 
     A tile (i, j) is skipped entirely only when NO row in m-block i keeps
-    any neuron of f-block j (tile_mask OR-reduce, scalar-prefetch driven,
-    same ``pl.when`` structure as ``masked_ffn``); surviving tiles apply the
-    exact per-row mask to the hidden activations. With a homogeneous decode
-    batch this degenerates to the block-skip kernel; with a mixed-rate batch
-    the skip rate follows the UNION of the requests' kept sets per m-block —
+    any neuron of f-block j (tile OR-mask, scalar-prefetch driven, same
+    ``pl.when`` structure as ``masked_ffn``); surviving tiles apply the
+    exact per-row mask to the hidden activations. With a homogeneous batch
+    this degenerates to the block-skip kernel; with a mixed-rate batch the
+    skip rate follows the UNION of the requests' kept sets per m-block —
     sorting requests by mask (launch/serving.py admits per-slot) recovers
-    most of the single-mask savings.
-    """
-    M, d = x.shape
-    F = w_in.shape[1]
-    assert F % BLOCK_NEURONS == 0 and row_mask.shape == (M, F), \
-        (row_mask.shape, (M, F))
-    block_m = min(block_m, M)
-    pad_m = (-M) % block_m
-    if pad_m:
-        x = jnp.pad(x, ((0, pad_m), (0, 0)))
-        row_mask = jnp.pad(row_mask, ((0, pad_m), (0, 0)))
-    MP = x.shape[0]
-    n_f = F // BLOCK_NEURONS
-    grid = (MP // block_m, n_f)
-
-    # (m_blocks * f_blocks,) i32: does any row of m-block i touch f-block j?
-    tile_mask = (row_mask.reshape(grid[0], block_m, n_f, BLOCK_NEURONS)
-                 .max(axis=(1, 3)) > 0).astype(jnp.int32).reshape(-1)
-
-    gate_specs = []
-    args = [tile_mask, x, row_mask.astype(x.dtype), w_in]
-    if w_gate is not None:
-        args.append(w_gate)
-        gate_specs = [pl.BlockSpec((d, BLOCK_NEURONS), lambda i, j, m: (0, j))]
-    args.append(w_out)
-
-    kernel = functools.partial(
-        _kernel_batch, n_f_blocks=n_f, act=_ACTS[act])
-    if w_gate is None:
-        kernel_fn = lambda t, xr, mr, wi, wo, y, a: kernel(t, xr, mr, wi,
-                                                           None, wo, y, a)
-    else:
-        kernel_fn = kernel
-
-    y = pl.pallas_call(
-        kernel_fn,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((block_m, d), lambda i, j, m: (i, 0)),
-                pl.BlockSpec((block_m, BLOCK_NEURONS),
-                             lambda i, j, m: (i, j)),
-                pl.BlockSpec((d, BLOCK_NEURONS), lambda i, j, m: (0, j)),
-                *gate_specs,
-                pl.BlockSpec((BLOCK_NEURONS, d), lambda i, j, m: (j, 0)),
-            ],
-            out_specs=pl.BlockSpec((block_m, d), lambda i, j, m: (i, 0)),
-            scratch_shapes=[pltpu.VMEM((block_m, d), jnp.float32)],
-        ),
-        out_shape=jax.ShapeDtypeStruct((MP, d), x.dtype),
-        interpret=interpret,
-    )(*args)
-    return y[:M]
+    most of the single-mask savings. The backward kernels skip through the
+    identical OR-mask, and within kept tiles the exact row mask zeroes the
+    dropped neurons' cotangents, so dW of fully-dropped neurons is exactly
+    zero (DESIGN.md §10)."""
+    _validate(x, w_in, w_out, w_gate, row_mask, per_row=True)
+    f = _differentiable(act, block_m, interpret, per_row=True)
+    return f(x, w_in, w_out, w_gate, row_mask.astype(jnp.float32))

@@ -11,7 +11,11 @@ import numpy as np
 
 from repro.kernels.decode_gqa import decode_gqa as _decode_gqa
 from repro.kernels.invariant_stats import invariant_stats as _invariant_stats
+from repro.kernels.masked_attn import masked_attention as _masked_attention
+from repro.kernels.masked_attn import masked_head_merge as _masked_head_merge
+from repro.kernels.masked_attn import masked_head_proj as _masked_head_proj
 from repro.kernels.masked_ffn import masked_ffn as _masked_ffn
+from repro.kernels.masked_ffn import masked_ffn_batch as _masked_ffn_batch
 from repro.kernels.rwkv_chunk import rwkv_chunk_scan as _rwkv_chunk_scan
 
 BLOCK_NEURONS = 128
@@ -22,22 +26,94 @@ def _default_interpret() -> bool:
 
 
 def invariant_stats(w0, w1, **kw):
+    """Per-column relative update norm ||dW_col|| / (||W0_col|| + eps).
+
+    w0, w1: (d_in, n) same shape/dtype. Returns (n,) fp32 — the per-neuron
+    invariance statistic of DESIGN.md and core/invariant.py, fused into one
+    Pallas reduction. Forward-only (server-side calibration).
+    Oracle: ref.invariant_stats_ref."""
     kw.setdefault("interpret", _default_interpret())
     return _invariant_stats(w0, w1, **kw)
 
 
 def masked_ffn(x, w_in, w_out, block_mask, w_gate=None, act="silu", **kw):
+    """Block-masked FFN, differentiable (DESIGN.md §10).
+
+    y = act-FFN(x) with 128-neuron hidden blocks dropped per `block_mask`
+    ((F//128,) 0/1): dropped blocks are *skipped*, forward and backward
+    (custom_vjp; dropped-block dW is exactly zero). x: (M, d);
+    w_in/(w_gate): (d, F); w_out: (F, d); F must be 128-aligned (ValueError
+    otherwise). act in {relu, relu2, gelu, silu}; w_gate enables the gated
+    (SwiGLU-style) form. Oracle: ref.masked_ffn_ref."""
     kw.setdefault("interpret", _default_interpret())
     return _masked_ffn(x, w_in, w_out, block_mask, w_gate=w_gate, act=act,
                        **kw)
 
 
+def masked_ffn_batch(x, w_in, w_out, row_mask, w_gate=None, act="silu", **kw):
+    """Per-row-masked FFN, differentiable (DESIGN.md §10).
+
+    Like masked_ffn but each row of x carries its own (F,) neuron mask
+    (row_mask: (M, F) 0/1) — the serving/fleet form where one batch mixes
+    sub-model sizes. A tile is skipped only when *every* row in the m-block
+    drops the whole f-block (scalar-prefetch OR-mask); kept tiles apply the
+    exact per-row mask. Oracle: ref.masked_ffn_batch_ref."""
+    kw.setdefault("interpret", _default_interpret())
+    return _masked_ffn_batch(x, w_in, w_out, row_mask, w_gate=w_gate,
+                             act=act, **kw)
+
+
+def masked_head_proj(x, w, head_mask, **kw):
+    """Head-masked input projection x @ w, differentiable (DESIGN.md §10).
+
+    w: (d_in, H*hd) with heads laid out unit-major (head slow, head-dim
+    fast); head_mask: (H,) 0/1. Dropped heads' output slabs are zeroed and
+    their tiles skipped, forward and backward (dropped-head dW slab exactly
+    zero). H must divide w.shape[1] evenly. Oracle: ref.masked_head_proj_ref."""
+    kw.setdefault("interpret", _default_interpret())
+    return _masked_head_proj(x, w, head_mask, **kw)
+
+
+def masked_head_merge(a, w, head_mask, **kw):
+    """Head-masked output merge a @ w, differentiable (DESIGN.md §10).
+
+    a: (M, H*hd) per-head context (unit-major); w: (H*hd, d_out);
+    head_mask: (H,) 0/1. Dropped heads' row slabs of w are skipped — the
+    dual of masked_head_proj, closing the head's consumer set.
+    Oracle: ref.masked_head_merge_ref."""
+    kw.setdefault("interpret", _default_interpret())
+    return _masked_head_merge(a, w, head_mask, **kw)
+
+
+def masked_attention(x, wq, wk, wv, wo, head_mask, n_heads, **kw):
+    """Head-masked causal MHA, differentiable (DESIGN.md §10).
+
+    x: (B, S, d); wq/wk/wv: (d, H*hd); wo: (H*hd, d); head_mask: (H,) 0/1
+    with n_heads == H. Kernel projections (dropped-head tiles skipped) →
+    dense jnp causal softmax → kernel merge; the VJP composes the pieces'.
+    Dropped heads contribute exact zeros end to end.
+    Oracle: ref.masked_attention_ref."""
+    kw.setdefault("interpret", _default_interpret())
+    return _masked_attention(x, wq, wk, wv, wo, head_mask, n_heads=n_heads,
+                             **kw)
+
+
 def decode_gqa(q, k, v, lengths, **kw):
+    """Flash-decode grouped-query attention over a ragged KV cache.
+
+    q: (B, H, hd); k/v: (B, C, KV, hd); lengths: (B,) valid prefix per
+    batch row. Returns (B, H, hd). Forward-only (serving path; DESIGN.md
+    §9.5). Oracle: ref.decode_gqa_ref."""
     kw.setdefault("interpret", _default_interpret())
     return _decode_gqa(q, k, v, lengths, **kw)
 
 
 def rwkv_chunk_scan(r, k, v, logw, u, **kw):
+    """Chunked RWKV-6 linear-attention recurrence.
+
+    r/k/v/logw: (B, S, H, N); u: (H, N). Returns (y (B,S,H,N) fp32,
+    final state (B,H,N,N) fp32). Forward-only (serving path).
+    Oracle: ref.rwkv_chunk_scan_ref."""
     kw.setdefault("interpret", _default_interpret())
     return _rwkv_chunk_scan(r, k, v, logw, u, **kw)
 

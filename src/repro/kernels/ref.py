@@ -22,6 +22,8 @@ def invariant_stats_ref(w0, w1):
 
 
 def masked_ffn_ref(x, w_in, w_out, block_mask, w_gate=None, act="silu"):
+    """Block-masked FFN oracle: hidden activations multiplied by the
+    128-expanded block mask before the output projection."""
     xf = x.astype(jnp.float32)
     h = xf @ w_in.astype(jnp.float32)
     if w_gate is not None:
@@ -33,6 +35,62 @@ def masked_ffn_ref(x, w_in, w_out, block_mask, w_gate=None, act="silu"):
     mask = jnp.repeat(block_mask.astype(jnp.float32), F // block_mask.shape[0])
     h = h * mask
     return (h @ w_out.astype(jnp.float32)).astype(x.dtype)
+
+
+def masked_ffn_batch_ref(x, w_in, w_out, row_mask, w_gate=None, act="silu"):
+    """Per-row-masked FFN oracle: hidden activations multiplied by each
+    row's own (M, F) 0/1 neuron mask before the output projection."""
+    xf = x.astype(jnp.float32)
+    h = xf @ w_in.astype(jnp.float32)
+    if w_gate is not None:
+        g = xf @ w_gate.astype(jnp.float32)
+        h = _ACTS[act](g) * h
+    else:
+        h = _ACTS[act](h)
+    h = h * row_mask.astype(jnp.float32)
+    return (h @ w_out.astype(jnp.float32)).astype(x.dtype)
+
+
+def head_mask_expand(head_mask, dout):
+    """(H,) head mask -> (dout,) per-column mask, head-dim fastest."""
+    H = head_mask.shape[0]
+    return jnp.repeat(head_mask.astype(jnp.float32), dout // H)
+
+
+def masked_head_proj_ref(x, w, head_mask):
+    """Dense oracle for masked_head_proj: x @ (w with dropped-head columns
+    zeroed)."""
+    m = head_mask_expand(head_mask, w.shape[1])
+    return (x.astype(jnp.float32) @ (w.astype(jnp.float32) * m[None, :])
+            ).astype(x.dtype)
+
+
+def masked_head_merge_ref(a, w, head_mask):
+    """Dense oracle for masked_head_merge: (a with dropped-head columns
+    zeroed) @ w — equivalently w with dropped-head ROWS zeroed."""
+    m = head_mask_expand(head_mask, a.shape[1])
+    return ((a.astype(jnp.float32) * m[None, :]) @ w.astype(jnp.float32)
+            ).astype(a.dtype)
+
+
+def masked_attention_ref(x, wq, wk, wv, wo, head_mask, n_heads):
+    """Dense causal MHA over head_mask ⊙ params (Q/K/V column head-slabs
+    and O row head-slabs zeroed)."""
+    B, S, d = x.shape
+    H = n_heads
+    hd = wq.shape[1] // H
+    m = head_mask_expand(head_mask, wq.shape[1])
+    xf = x.astype(jnp.float32).reshape(B * S, d)
+    q = (xf @ (wq.astype(jnp.float32) * m)).reshape(B, S, H, hd)
+    k = (xf @ (wk.astype(jnp.float32) * m)).reshape(B, S, H, hd)
+    v = (xf @ (wv.astype(jnp.float32) * m)).reshape(B, S, H, hd)
+    s = jnp.einsum("bqhe,bkhe->bhqk", q, k) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(causal[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqk,bkhe->bqhe", p, v).reshape(B * S, H * hd)
+    out = (ctx * m) @ (wo.astype(jnp.float32))
+    return out.reshape(B, S, d).astype(x.dtype)
 
 
 def decode_gqa_ref(q, k, v, lengths):

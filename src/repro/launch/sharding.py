@@ -95,6 +95,31 @@ def serve_kernels_context(ffn: bool = False, attn: bool = False,
         _STATE.serve_kernels = prev
 
 
+def train_kernel_flags() -> dict:
+    """Which Pallas kernels the TRAIN step should trace in:
+    {'ffn': bool, 'interpret': bool}. Defaults to off (pure-jnp dense
+    masking). Unlike serve_kernel_flags this routes the *differentiable*
+    custom_vjp kernels (DESIGN.md §10) — both forward and backward skip
+    dropped 128-blocks — so it only applies where a per-layer neuron mask
+    is being trained through (launch/steps.py make_train_step
+    with_masks=True, use_kernels=True)."""
+    return getattr(_STATE, "train_kernels",
+                   {"ffn": False, "interpret": True})
+
+
+@contextlib.contextmanager
+def train_kernels_context(ffn: bool = False, interpret: bool = True):
+    """Opt the train step into the differentiable masked-FFN kernel
+    (kernels/masked_ffn.py, custom_vjp). Same trace-time thread-local idiom
+    as serve_kernels_context."""
+    prev = train_kernel_flags()
+    _STATE.train_kernels = {"ffn": ffn, "interpret": interpret}
+    try:
+        yield
+    finally:
+        _STATE.train_kernels = prev
+
+
 def batch_axes(mesh: Mesh):
     names = mesh.axis_names
     return tuple(a for a in ("pod", "data") if a in names)

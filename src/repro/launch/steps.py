@@ -105,15 +105,28 @@ def opt_state_shardings(mesh, opt_specs, param_shards):
 # step functions
 
 def make_train_step(cfg: ModelConfig, unroll: bool = False,
-                    with_masks: bool = False):
+                    with_masks: bool = False, use_kernels: bool = False,
+                    kernel_interpret: Optional[bool] = None):
+    """Build the (jit-able) train step.
+
+    use_kernels routes the masked FFN matmuls through the differentiable
+    Pallas kernels (kernels/masked_ffn.py custom_vjp — forward and backward
+    skip dropped 128-blocks, DESIGN.md §10) by tracing the loss under
+    sharding.train_kernels_context. Only meaningful with with_masks=True;
+    kernel_interpret defaults to True off-TPU (correctness mode)."""
     opt = make_optimizer(cfg.optimizer)
     accum = max(cfg.grad_accum, 1)
+    if kernel_interpret is None:
+        from repro.kernels.ops import _default_interpret
+        kernel_interpret = _default_interpret()
 
     def grads_of(params, batch, masks):
         def lf(p):
             return model_lib.loss_fn(p, cfg, batch, masks=masks,
                                      unroll=unroll)
-        return jax.value_and_grad(lf, has_aux=True)(params)
+        with shlib.train_kernels_context(ffn=use_kernels,
+                                         interpret=kernel_interpret):
+            return jax.value_and_grad(lf, has_aux=True)(params)
 
     def step(params, opt_state, batch, masks=None):
         if accum > 1:

@@ -1,0 +1,202 @@
+"""Fleet models whose masked matmuls can route through the Pallas kernels.
+
+The paper-scale models in models/small.py express sub-models as dense
+`mask * params` trees (DESIGN.md §8) — dense FLOPs at every dropout rate.
+These two architectures keep the same contract (init / apply / UNIT_SPECS)
+and add the kernel-side dual:
+
+  apply_kernels(params, x, kmasks, interpret) -> logits
+      identical math to `apply` on mask-consistent params, but the masked
+      matmuls run through kernels/masked_ffn.py and kernels/masked_attn.py
+      so dropped 128-blocks / heads are *skipped*, forward and backward
+      (DESIGN.md §10) — a rate-r straggler actually does ~r of the FLOPs.
+  kernel_masks(mask_tree) -> {"group": small mask}
+      projects a dense keep-mask tree (core/submodel.keep_mask) down to the
+      compact per-neuron / per-head vectors the kernels consume.
+
+Equivalence contract (tests/test_kernel_grad.py): on params already masked
+by `apply_mask`, `apply_kernels` == `apply` exactly (the hidden activations
+the kernels skip are act(0) = 0), and `jax.grad` through either path gives
+the same mask-projected update.
+
+Kernel alignment drives the shapes: FFN hidden dims are multiples of
+BLOCK_NEURONS=128, attention uses the decode_gqa head layout (heads
+contiguous, head-dim fastest — the unit-major `tile < 0` grammar in
+core/submodel.expand_indices).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.masked_attn import masked_attention
+from repro.kernels.masked_ffn import masked_ffn_batch
+
+
+def _dense(key, fan_in, shape):
+    return jax.random.normal(key, shape) * (1.0 / np.sqrt(fan_in))
+
+
+def _flat(x):
+    return x.reshape(x.shape[0], -1)
+
+
+class KernelMLP:
+    """Flatten -> encode(64) -> masked FFN 64->1024->64 -> linear head.
+
+    The FFN hidden layer (1024 = 8 x 128 blocks, gelu, no biases) is the
+    droppable group; encoder and head are transferred whole. Sized for the
+    FEMNIST stand-in (28x28x1, 62 classes)."""
+    num_classes = 62
+    input_shape = (28, 28, 1)
+    d = 64
+    hidden = 1024
+
+    UNIT_SPECS = [
+        {"name": "ffn", "size": 1024,
+         "out": [("ffn/w_in", 1, 1)],
+         "in": [("ffn/w_out", 0, 1)]},
+    ]
+
+    @staticmethod
+    def init(key):
+        ks = jax.random.split(key, 4)
+        d, F = KernelMLP.d, KernelMLP.hidden
+        return {
+            "enc": _dense(ks[0], 784, (784, d)),
+            "ffn": {"w_in": _dense(ks[1], d, (d, F)),
+                    "w_out": _dense(ks[2], F, (F, d))},
+            "out": {"w": _dense(ks[3], d, (d, 62)), "b": jnp.zeros((62,))},
+        }
+
+    @staticmethod
+    def apply(params, x):
+        z = _flat(x) @ params["enc"]
+        h = jax.nn.gelu(z @ params["ffn"]["w_in"]) @ params["ffn"]["w_out"]
+        return h @ params["out"]["w"] + params["out"]["b"]
+
+    @staticmethod
+    def kernel_masks(mask_tree):
+        """Dense keep-mask tree -> per-neuron (1024,) 0/1 vector (a w_in
+        column is 1 iff its neuron is kept)."""
+        return {"ffn": mask_tree["ffn"]["w_in"].max(axis=0)}
+
+    @staticmethod
+    def apply_kernels(params, x, kmasks, interpret=True):
+        z = _flat(x) @ params["enc"]
+        rm = jnp.broadcast_to(kmasks["ffn"][None, :],
+                              (z.shape[0], kmasks["ffn"].shape[0]))
+        h = masked_ffn_batch(z, params["ffn"]["w_in"],
+                             params["ffn"]["w_out"], rm, act="gelu",
+                             interpret=interpret)
+        return h @ params["out"]["w"] + params["out"]["b"]
+
+
+class KernelAttnClassifier:
+    """Patchify -> embed -> head-masked MHA -> block-masked FFN -> head.
+
+    28x28 images become 49 patches of 16 pixels; one pre-norm-free
+    transformer block with H=4 heads (hd=16, decode_gqa layout) and a
+    64->256->64 gelu FFN (2 x 128 blocks), mean-pooled into a linear
+    classifier. Two droppable groups: "heads" (unit-major tile = -16) and
+    "ffn"."""
+    num_classes = 62
+    input_shape = (28, 28, 1)
+    d = 64
+    n_heads = 4
+    head_dim = 16
+    hidden = 256
+
+    UNIT_SPECS = [
+        {"name": "heads", "size": 4,
+         "out": [("attn/wq", 1, -16), ("attn/wk", 1, -16),
+                 ("attn/wv", 1, -16)],
+         "in": [("attn/wo", 0, -16)]},
+        {"name": "ffn", "size": 256,
+         "out": [("ffn/w_in", 1, 1)],
+         "in": [("ffn/w_out", 0, 1)]},
+    ]
+
+    @staticmethod
+    def _patches(x):
+        """(B, 28, 28, 1) -> (B, 49, 16): 7x7 grid of 4x4 patches."""
+        B = x.shape[0]
+        p = x.reshape(B, 7, 4, 7, 4).transpose(0, 1, 3, 2, 4)
+        return p.reshape(B, 49, 16)
+
+    @staticmethod
+    def init(key):
+        ks = jax.random.split(key, 8)
+        d, F = KernelAttnClassifier.d, KernelAttnClassifier.hidden
+        return {
+            "embed": _dense(ks[0], 16, (16, d)),
+            "attn": {"wq": _dense(ks[1], d, (d, d)),
+                     "wk": _dense(ks[2], d, (d, d)),
+                     "wv": _dense(ks[3], d, (d, d)),
+                     "wo": _dense(ks[4], d, (d, d))},
+            "ffn": {"w_in": _dense(ks[5], d, (d, F)),
+                    "w_out": _dense(ks[6], F, (F, d))},
+            "out": {"w": _dense(ks[7], d, (d, 62)), "b": jnp.zeros((62,))},
+        }
+
+    @staticmethod
+    def _dense_attn(p, e):
+        cls = KernelAttnClassifier
+        B, S, d = e.shape
+        H, hd = cls.n_heads, cls.head_dim
+        x2 = e.reshape(B * S, d)
+        q = (x2 @ p["wq"]).reshape(B, S, H, hd)
+        k = (x2 @ p["wk"]).reshape(B, S, H, hd)
+        v = (x2 @ p["wv"]).reshape(B, S, H, hd)
+        s = jnp.einsum("bqhe,bkhe->bhqk", q, k) / jnp.sqrt(float(hd))
+        causal = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(causal[None, None], s, -1e30)
+        probs = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhqk,bkhe->bqhe", probs, v).reshape(B * S, H * hd)
+        return (ctx @ p["wo"]).reshape(B, S, d)
+
+    @staticmethod
+    def apply(params, x):
+        cls = KernelAttnClassifier
+        e = cls._patches(x) @ params["embed"]
+        h = e + cls._dense_attn(params["attn"], e)
+        B, S, d = h.shape
+        f = (jax.nn.gelu(h.reshape(B * S, d) @ params["ffn"]["w_in"])
+             @ params["ffn"]["w_out"]).reshape(B, S, d)
+        h = h + f
+        pooled = h.mean(axis=1)
+        return pooled @ params["out"]["w"] + params["out"]["b"]
+
+    @staticmethod
+    def kernel_masks(mask_tree):
+        """Dense keep-mask tree -> {"heads": (4,), "ffn": (256,)} 0/1.
+        A head is kept iff any of its wq columns is; unit-major layout
+        (head-dim fastest), so columns group as (H, hd)."""
+        cls = KernelAttnClassifier
+        col = mask_tree["attn"]["wq"].max(axis=0)
+        return {"heads": col.reshape(cls.n_heads, cls.head_dim).max(axis=1),
+                "ffn": mask_tree["ffn"]["w_in"].max(axis=0)}
+
+    @staticmethod
+    def apply_kernels(params, x, kmasks, interpret=True):
+        cls = KernelAttnClassifier
+        e = cls._patches(x) @ params["embed"]
+        a = masked_attention(e, params["attn"]["wq"], params["attn"]["wk"],
+                             params["attn"]["wv"], params["attn"]["wo"],
+                             kmasks["heads"], n_heads=cls.n_heads,
+                             interpret=interpret)
+        h = e + a
+        B, S, d = h.shape
+        rm = jnp.broadcast_to(kmasks["ffn"][None, :],
+                              (B * S, kmasks["ffn"].shape[0]))
+        f = masked_ffn_batch(h.reshape(B * S, d), params["ffn"]["w_in"],
+                             params["ffn"]["w_out"], rm, act="gelu",
+                             interpret=interpret).reshape(B, S, d)
+        h = h + f
+        pooled = h.mean(axis=1)
+        return pooled @ params["out"]["w"] + params["out"]["b"]
+
+
+KERNEL_MODELS = {"kernel_mlp": KernelMLP,
+                 "kernel_attn": KernelAttnClassifier}

@@ -6,7 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.launch.sharding import serve_kernel_flags, shard
+from repro.launch.sharding import (serve_kernel_flags, shard,
+                                   train_kernel_flags)
 
 
 def cdtype(cfg: ModelConfig):
@@ -148,15 +149,40 @@ def _ffn_kernel_ok(p, x, cfg, neuron_mask) -> bool:
             and cfg.ffn_kind in _KERNEL_ACT)
 
 
+def _ffn_train_kernel_ok(p, x, cfg, neuron_mask) -> bool:
+    """The differentiable masked kernel applies on the (B, S, d) train shape
+    with one shared (f,) layer mask, no biases, 128-aligned hidden dim."""
+    return (x.ndim == 3 and neuron_mask is not None and neuron_mask.ndim == 1
+            and "b_in" not in p
+            and p["w_in"].shape[1] % 128 == 0
+            and cfg.ffn_kind in _KERNEL_ACT)
+
+
 def apply_ffn(p, x, cfg: ModelConfig, neuron_mask=None):
     """FFN with optional neuron mask (Invariant-Dropout masked sub-model).
 
     neuron_mask: (f,) 0/1 — masked neurons contribute nothing; identical in
     math to physically extracting the sub-model columns. The serving decode
     step passes per-request masks (B, 1, f) instead and may opt into the
-    tile-skipping Pallas kernel via sharding.serve_kernels_context.
+    tile-skipping Pallas kernel via sharding.serve_kernels_context; the
+    train step opts into the differentiable custom_vjp kernel (forward AND
+    backward skip dropped blocks, DESIGN.md §10) via
+    sharding.train_kernels_context.
     """
     dt = cdtype(cfg)
+    tflags = train_kernel_flags()
+    if tflags["ffn"] and _ffn_train_kernel_ok(p, x, cfg, neuron_mask):
+        from repro.kernels.masked_ffn import masked_ffn_batch
+        act, gated = _KERNEL_ACT[cfg.ffn_kind]
+        B, S, d = x.shape
+        f = p["w_in"].shape[1]
+        rm = jnp.broadcast_to(neuron_mask.astype(dt)[None, :], (B * S, f))
+        y = masked_ffn_batch(
+            x.reshape(B * S, d).astype(dt), p["w_in"].astype(dt),
+            p["w_out"].astype(dt), rm,
+            w_gate=p["w_gate"].astype(dt) if gated else None,
+            act=act, interpret=tflags["interpret"])
+        return shard(y.reshape(B, S, d), "B", None, None)
     flags = serve_kernel_flags()
     if flags["ffn"] and _ffn_kernel_ok(p, x, cfg, neuron_mask):
         from repro.kernels.masked_ffn import masked_ffn_batch
