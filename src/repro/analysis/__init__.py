@@ -1,0 +1,27 @@
+"""Static analysis for the FLuID reproduction (DESIGN.md §11).
+
+Three passes, one CLI (``python -m repro.analysis``), one CI gate:
+
+  * ``lint``             — AST rules over ``src/`` catching the JAX footguns
+                           this codebase has actually hit: tracer-unsafe
+                           control flow, trace-time loop unrolling, implicit
+                           float64 promotion, host syncs under jit,
+                           unregistered dropout policies, and step functions
+                           jitted without a donation declaration.
+  * ``contracts``        — trace-time checks: every workload's loss/step
+                           traces free of f64 and host callbacks, the fleet /
+                           serving / masked-train programs compile exactly
+                           once across mixed masks and hyperparameters, and
+                           dropped-block dW cotangents are structurally zero
+                           (NaN-poison proof) for every 128-aligned configs/
+                           shape.
+  * ``kernel_contracts`` — whole-zoo static sweep of the Pallas kernel
+                           alignment grammar (DESIGN.md §10): tile
+                           divisibility, mask shapes, unit-spec tile
+                           expansion (including unit-major ``tile < 0``).
+
+Each pass returns plain finding lists so tests can assert on them; the CLI
+aggregates exit status. Suppress lint findings with
+``# fluidlint: disable=RULE`` (see analysis/lint.py).
+"""
+from repro.analysis.lint import RULES, Finding, lint_paths, lint_source  # noqa: F401

@@ -1,0 +1,71 @@
+"""CLI driver: ``python -m repro.analysis [--lint|--contracts|--kernels|--all]``.
+
+Exit status 0 when every selected pass is clean, 1 otherwise — the CI
+``static-analysis`` job gates on it (see .github/workflows/ci.yml and the
+README's "Checking your changes" section).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static analysis for the FLuID repro: AST lint, "
+                    "trace-time contracts, kernel shape contracts.")
+    ap.add_argument("--lint", action="store_true",
+                    help="AST lint (tracer safety, dtype discipline, "
+                         "donation, policy registration)")
+    ap.add_argument("--contracts", action="store_true",
+                    help="trace-time contracts (no-f64, single-trace, "
+                         "dropped-dW-zero)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="kernel shape/grammar contracts (static sweep)")
+    ap.add_argument("--all", action="store_true",
+                    help="run every pass (default when none is selected)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files/dirs for --lint (default: src)")
+    args = ap.parse_args(argv)
+
+    if not (args.lint or args.contracts or args.kernels):
+        args.all = True
+    problems = 0
+
+    if args.lint or args.all:
+        from repro.analysis.lint import lint_paths
+        t0 = time.time()
+        findings = lint_paths(args.paths or ["src"])
+        for f in findings:
+            print(f)
+        print(f"[lint] {len(findings)} finding(s) in {time.time() - t0:.1f}s")
+        problems += len(findings)
+
+    if args.contracts or args.all:
+        from repro.analysis.contracts import run_contracts
+        t0 = time.time()
+        vs = run_contracts(
+            progress=lambda n: print(f"[contracts] {n} ...", flush=True))
+        for v in vs:
+            print(v)
+        print(f"[contracts] {len(vs)} violation(s) "
+              f"in {time.time() - t0:.1f}s")
+        problems += len(vs)
+
+    if args.kernels or args.all:
+        from repro.analysis.kernel_contracts import run_kernel_contracts
+        t0 = time.time()
+        vs = run_kernel_contracts(
+            progress=lambda n: print(f"[kernels] {n} ...", flush=True))
+        for v in vs:
+            print(v)
+        print(f"[kernels] {len(vs)} violation(s) in {time.time() - t0:.1f}s")
+        problems += len(vs)
+
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

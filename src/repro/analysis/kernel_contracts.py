@@ -1,0 +1,279 @@
+"""Static kernel-contract validator (pass 3 of repro.analysis).
+
+Pure shape/grammar checking — no kernel executes. ``jax.eval_shape``
+through the jit'd Pallas entry points runs each kernel's ``_validate`` at
+trace time with zero allocation, so the whole zoo sweeps in milliseconds
+at REAL dimensions (d_model in the thousands, d_ff in the tens of
+thousands):
+
+  * **tile eligibility**: every FFN width in configs/ (d_ff and the MoE
+    expert width) is classified against the BLOCK_NEURONS=128 grammar.
+    Aligned widths must trace through ``masked_ffn`` / ``masked_ffn_batch``;
+    misaligned widths must raise ValueError — the loud-failure contract
+    (never a silent dense fallback). Head layouts sweep the same way
+    through ``masked_head_proj`` / ``masked_head_merge``.
+  * **mask-shape rejection**: wrong block-mask lengths, wrong row-mask
+    shapes, and non-dividing head masks must all raise ValueError.
+  * **UNIT_SPECS grammar**: every (path, axis, tile) entry of every fleet
+    model resolves against the model's eval_shape'd init tree, the axis
+    length equals size * |tile|, and ``expand_indices`` is a permutation —
+    with tile < 0 additionally unit-major (each unit owns |tile|
+    contiguous slots, the attention-head layout).
+  * **constants**: ops.BLOCK_NEURONS == masked_ffn.BLOCK_NEURONS, and
+    ``neuron_mask_to_block_mask`` keeps a block iff any neuron survives.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.analysis.contracts import Violation
+
+_F32 = jnp.float32
+
+
+def _sds(*shape):
+    return jax.ShapeDtypeStruct(shape, _F32)
+
+
+def _traces_ok(fn, *specs):
+    """(ok, err): eval_shape fn on specs; ValueError -> (False, msg)."""
+    try:
+        jax.eval_shape(fn, *specs)
+        return True, ""
+    except ValueError as e:
+        return False, str(e)
+
+
+# ---------------------------------------------------------------------------
+# FFN width sweep
+
+def _ffn_widths():
+    """{(F, d_model): [arch, ...]} over d_ff and MoE expert widths."""
+    from repro.configs.base import all_configs
+    widths: Dict[tuple, list] = {}
+    for arch, cfg in all_configs().items():
+        for F in {cfg.d_ff, cfg.moe_ff}:
+            widths.setdefault((F, cfg.d_model), []).append(arch)
+    return widths
+
+
+def check_ffn_tile_eligibility() -> List[Violation]:
+    from repro.kernels.masked_ffn import (BLOCK_NEURONS, masked_ffn,
+                                          masked_ffn_batch)
+    out = []
+    M = 8
+    f_single = functools.partial(masked_ffn, act="silu", interpret=True)
+    f_batch = functools.partial(masked_ffn_batch, act="silu", interpret=True)
+    for (F, d), archs in sorted(_ffn_widths().items()):
+        where = f"d_ff={F}, d_model={d} ({', '.join(sorted(archs))})"
+        aligned = F % BLOCK_NEURONS == 0
+        nb = max(F // BLOCK_NEURONS, 1)
+        ok1, err1 = _traces_ok(f_single, _sds(M, d), _sds(d, F), _sds(F, d),
+                               _sds(nb))
+        ok2, err2 = _traces_ok(f_batch, _sds(M, d), _sds(d, F), _sds(F, d),
+                               _sds(M, F))
+        if aligned:
+            if not ok1:
+                out.append(Violation("kernel-ffn-tiles", where,
+                                     f"128-aligned width rejected by "
+                                     f"masked_ffn: {err1}"))
+            if not ok2:
+                out.append(Violation("kernel-ffn-tiles", where,
+                                     f"128-aligned width rejected by "
+                                     f"masked_ffn_batch: {err2}"))
+        else:
+            # kernel-ineligible width: models must keep the dense masked
+            # path; the kernels must refuse loudly
+            if ok1 or ok2:
+                out.append(Violation(
+                    "kernel-ffn-tiles", where,
+                    f"width is NOT {BLOCK_NEURONS}-aligned but a masked-FFN "
+                    f"kernel accepted it — the silent-dense footgun"))
+    return out
+
+
+def check_head_layouts() -> List[Violation]:
+    """Every config's (n_heads, head_dim) projection layout traces through
+    the head-masked kernels."""
+    from repro.configs.base import all_configs
+    from repro.kernels.masked_attn import masked_head_merge, masked_head_proj
+    out = []
+    M = 8
+    seen = set()
+    for arch, cfg in sorted(all_configs().items()):
+        H, hd, d = cfg.n_heads, cfg.head_dim, cfg.d_model
+        if (H, hd, d) in seen:
+            continue
+        seen.add((H, hd, d))
+        where = f"H={H}, head_dim={hd}, d_model={d} ({arch})"
+        okp, errp = _traces_ok(
+            functools.partial(masked_head_proj, interpret=True),
+            _sds(M, d), _sds(d, H * hd), _sds(H))
+        okm, errm = _traces_ok(
+            functools.partial(masked_head_merge, interpret=True),
+            _sds(M, H * hd), _sds(H * hd, d), _sds(H))
+        if not okp:
+            out.append(Violation("kernel-head-layout", where,
+                                 f"masked_head_proj rejected the layout: "
+                                 f"{errp}"))
+        if not okm:
+            out.append(Violation("kernel-head-layout", where,
+                                 f"masked_head_merge rejected the layout: "
+                                 f"{errm}"))
+    return out
+
+
+def check_mask_shape_rejection() -> List[Violation]:
+    """Malformed masks must raise ValueError at trace time, not compute."""
+    from repro.kernels.masked_attn import masked_head_proj
+    from repro.kernels.masked_ffn import masked_ffn, masked_ffn_batch
+    out = []
+    d, F, M = 16, 256, 8
+    cases = [
+        ("block_mask wrong length",
+         functools.partial(masked_ffn, act="silu", interpret=True),
+         (_sds(M, d), _sds(d, F), _sds(F, d), _sds(F // 128 + 1))),
+        ("neuron-granular mask passed to the block-mask entry",
+         functools.partial(masked_ffn, act="silu", interpret=True),
+         (_sds(M, d), _sds(d, F), _sds(F, d), _sds(F))),
+        ("row_mask wrong row count",
+         functools.partial(masked_ffn_batch, act="silu", interpret=True),
+         (_sds(M, d), _sds(d, F), _sds(F, d), _sds(M + 1, F))),
+        ("misaligned hidden dim (F=200)",
+         functools.partial(masked_ffn, act="silu", interpret=True),
+         (_sds(M, d), _sds(d, 200), _sds(200, d), _sds(1))),
+        ("head mask not dividing the projection (H=3 into 64)",
+         functools.partial(masked_head_proj, interpret=True),
+         (_sds(M, d), _sds(d, 64), _sds(3))),
+    ]
+    for label, fn, specs in cases:
+        ok, _ = _traces_ok(fn, *specs)
+        if ok:
+            out.append(Violation("kernel-mask-shapes", label,
+                                 "malformed mask was accepted silently "
+                                 "(expected a trace-time ValueError)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# UNIT_SPECS grammar
+
+def _get_path(tree, path):
+    node = tree
+    for part in path.split("/"):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def check_unit_specs() -> List[Violation]:
+    from repro.core.submodel import expand_indices
+    from repro.models.kernel_models import KERNEL_MODELS
+    from repro.models.small import MODELS
+    out = []
+    for name, cls in {**MODELS, **KERNEL_MODELS}.items():
+        params = jax.eval_shape(cls.init, jax.random.PRNGKey(0))
+        for g in cls.UNIT_SPECS:
+            size = g["size"]
+            for role in ("out", "in"):
+                for path, axis, tile in g[role]:
+                    where = f"{name}:{g['name']} ({role} {path} ax{axis})"
+                    leaf = _get_path(params, path)
+                    if leaf is None:
+                        out.append(Violation(
+                            "unit-specs", where,
+                            f"path '{path}' not found in the init tree"))
+                        continue
+                    if not -leaf.ndim <= axis < leaf.ndim:
+                        out.append(Violation(
+                            "unit-specs", where,
+                            f"axis {axis} out of range for shape "
+                            f"{leaf.shape}"))
+                        continue
+                    t = abs(tile)
+                    if leaf.shape[axis] != size * t:
+                        out.append(Violation(
+                            "unit-specs", where,
+                            f"axis length {leaf.shape[axis]} != size*|tile| "
+                            f"= {size}*{t}"))
+                        continue
+                    # full keep must expand to a permutation of the axis
+                    full = expand_indices(np.arange(size), tile, size)
+                    if not np.array_equal(np.sort(full),
+                                          np.arange(size * t)):
+                        out.append(Violation(
+                            "unit-specs", where,
+                            f"expand_indices(all, tile={tile}) is not a "
+                            f"permutation of the axis"))
+                        continue
+                    if tile < 0:
+                        # unit-major: each unit owns |tile| contiguous slots
+                        # (the attention-head layout decode_gqa relies on)
+                        for u in (0, size - 1):
+                            got = expand_indices(np.array([u]), tile, size)
+                            want = np.arange(u * t, (u + 1) * t)
+                            if not np.array_equal(got, want):
+                                out.append(Violation(
+                                    "unit-specs", where,
+                                    f"tile={tile} unit {u} expands to "
+                                    f"{got[:4]}... (want the contiguous "
+                                    f"slab {u * t}..{(u + 1) * t - 1})"))
+                                break
+    return out
+
+
+# ---------------------------------------------------------------------------
+# constants / round trips
+
+def check_block_constants() -> List[Violation]:
+    from repro.kernels import masked_ffn as mffn
+    from repro.kernels import ops
+    out = []
+    if ops.BLOCK_NEURONS != mffn.BLOCK_NEURONS:
+        out.append(Violation(
+            "kernel-constants", "BLOCK_NEURONS",
+            f"ops.BLOCK_NEURONS={ops.BLOCK_NEURONS} != "
+            f"masked_ffn.BLOCK_NEURONS={mffn.BLOCK_NEURONS}"))
+    rng = np.random.RandomState(0)
+    F = 512
+    neuron = (rng.rand(F) < 0.3).astype(np.float32)
+    blocks = ops.neuron_mask_to_block_mask(neuron)
+    want = (neuron.reshape(-1, ops.BLOCK_NEURONS).max(axis=1) > 0)
+    if blocks.shape != (F // ops.BLOCK_NEURONS,) or not np.array_equal(
+            blocks.astype(bool), want):
+        out.append(Violation(
+            "kernel-constants", "neuron_mask_to_block_mask",
+            "block mask does not keep exactly the blocks with a surviving "
+            "neuron"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# registry / driver
+
+KERNEL_CHECKS: Dict[str, Callable[[], List[Violation]]] = {
+    "kernel-ffn-tiles": check_ffn_tile_eligibility,
+    "kernel-head-layout": check_head_layouts,
+    "kernel-mask-shapes": check_mask_shape_rejection,
+    "unit-specs": check_unit_specs,
+    "kernel-constants": check_block_constants,
+}
+
+
+def run_kernel_contracts(progress=None) -> List[Violation]:
+    out = []
+    for name, fn in KERNEL_CHECKS.items():
+        if progress:
+            progress(name)
+        try:
+            out.extend(fn())
+        except Exception as e:                       # noqa: BLE001
+            out.append(Violation(name, fn.__name__,
+                                 f"check crashed: {type(e).__name__}: {e}"))
+    return out

@@ -1,0 +1,424 @@
+"""Repo-specific AST lint: the JAX footguns this codebase actually hits.
+
+Every rule exists because some version of the bug shipped (or nearly did)
+in this repo; the fix-it messages point at the idiom the codebase settled
+on rather than generic advice. Rules:
+
+  FLD101 tracer-branch     Python ``if``/``while`` on a jnp expression —
+                           under jit the test is a tracer and raises
+                           ConcretizationTypeError (or silently freezes the
+                           branch at trace time under vmap batching).
+  FLD102 loop-jnp          jnp calls inside a Python loop in a jit-traced
+                           function: the loop unrolls into the jaxpr at
+                           trace time (fleet.py's intentional unroll is
+                           opt-in via disable; see DESIGN.md §8).
+  FLD103 np-float-op       np.sqrt/np.exp/... in a jax-importing module:
+                           numpy float ops return *strong* np.float64
+                           scalars that upcast jax arrays when x64 is
+                           enabled (math.* returns weak Python floats and
+                           never promotes; jnp.* stays on device).
+  FLD104 factory-dtype     dtype-less float factory (jnp.zeros/ones/full/
+                           linspace/eye): defaults to float64 under x64 and
+                           ignores the config's param_dtype either way.
+  FLD105 host-sync         .item()/np.asarray/np.array/jax.device_get
+                           inside a statically jit-traced function: a
+                           device→host sync (or a trace error) on the hot
+                           path.
+  FLD106 unregistered-policy  BasePolicy subclass without
+                           @register_policy: invisible to get_policy(), so
+                           the FL loop and serving engine can't resolve it.
+  FLD107 missing-donate    jax.jit(<step function>) without donate_argnums:
+                           train/decode steps that thread params/opt-state/
+                           caches through themselves double their peak
+                           memory unless the dead input buffers are
+                           donated. Pass launch.sharding.donate_args(...)
+                           (gated off CPU) or an explicit () to declare
+                           nothing is donatable.
+
+Suppression: append ``# fluidlint: disable=FLD103`` (comma-list, or
+``all``) to the offending line, or put
+``# fluidlint: disable-file=FLD102`` in the first ten lines of the file.
+
+Scope notes. "jit-traced function" (FLD102/FLD105) means statically
+visible tracing only: a function decorated with jax.jit /
+functools.partial(jax.jit, ...) or whose name is passed to
+jax.jit/vmap/grad/value_and_grad/checkpoint/lax.scan *in the same module*,
+including everything nested inside it. Factories built and returned for
+the caller to jit (launch/steps.py) are out of reach — the contracts pass
+(analysis/contracts.py) covers those dynamically. Bare Python float
+literals are *not* flagged: jax keeps them weak-typed, so ``x * 0.5``
+never promotes — the promotion hazards are strong np scalars (FLD103) and
+dtype-less factories (FLD104).
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    name: str
+    summary: str
+    fixit: str
+
+
+RULES: Dict[str, Rule] = {r.id: r for r in [
+    Rule("FLD101", "tracer-branch",
+         "Python if/while on a jnp expression",
+         "use jnp.where / jax.lax.cond / jax.lax.while_loop (or hoist the "
+         "test to host-side numpy before tracing)"),
+    Rule("FLD102", "loop-jnp",
+         "jnp call inside a Python loop in a jit-traced function",
+         "use jax.lax.scan / fori_loop, or suppress if the unroll is "
+         "intentional and bounded (DESIGN.md §8)"),
+    Rule("FLD103", "np-float-op",
+         "numpy float op in a jax-importing module",
+         "use math.* for Python scalars (stays weak-typed) or jnp.* for "
+         "arrays; np float ops return strong np.float64 scalars that "
+         "upcast jax arrays under x64"),
+    Rule("FLD104", "factory-dtype",
+         "dtype-less float jnp factory",
+         "pass dtype= explicitly (float factories default to f64 under "
+         "x64 and ignore the config's param_dtype)"),
+    Rule("FLD105", "host-sync",
+         "host sync inside a jit-traced function",
+         "move .item()/np.asarray/device_get outside the traced function; "
+         "inside a trace they either error or silently round-trip to host"),
+    Rule("FLD106", "unregistered-policy",
+         "BasePolicy subclass not registered",
+         "decorate with @register_policy(\"<name>\") so "
+         "core.dropout.get_policy can resolve it"),
+    Rule("FLD107", "missing-donate",
+         "jax.jit on a step function without donate_argnums",
+         "pass donate_argnums=launch.sharding.donate_args(...) (returns () "
+         "on CPU where donation is unsupported), or an explicit () to "
+         "declare nothing is donatable"),
+]}
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    col: int
+    message: str
+
+    def __str__(self):
+        r = RULES[self.rule]
+        return (f"{self.path}:{self.line}:{self.col}: {self.rule} "
+                f"[{r.name}] {self.message} — fix: {r.fixit}")
+
+
+_SUPPRESS_LINE = re.compile(r"#\s*fluidlint:\s*disable=([A-Za-z0-9,\s]+)")
+_SUPPRESS_FILE = re.compile(r"#\s*fluidlint:\s*disable-file=([A-Za-z0-9,\s]+)")
+
+# numpy scalar ops whose results are STRONG np.float64 (unlike math.*,
+# whose Python floats stay weak and never promote a jax array)
+_NP_FLOAT_OPS = {"sqrt", "exp", "expm1", "log", "log2", "log10", "log1p",
+                 "power", "float_power", "sin", "cos", "tan", "tanh",
+                 "sinh", "cosh", "arctan2", "hypot", "reciprocal"}
+
+# float-producing factories and the position of their optional dtype arg
+_FLOAT_FACTORIES = {"zeros": 1, "ones": 1, "full": 2, "linspace": 5,
+                    "eye": 3, "empty": 1}
+
+# trailing attribute paths (under a jax alias, or bare `from jax import X`)
+# mapped to the positional indices that hold traced *functions* (the other
+# positions are data: scan's carry, cond's operands, ...)
+_TRACE_TAILS = {("jit",): (0,), ("vmap",): (0,), ("grad",): (0,),
+                ("value_and_grad",): (0,), ("checkpoint",): (0,),
+                ("lax", "scan"): (0,), ("lax", "fori_loop"): (2,),
+                ("lax", "while_loop"): (0, 1), ("lax", "cond"): (1, 2)}
+
+_HOST_SYNC_NP = {"asarray", "array", "copy"}
+
+
+def _dotted(node: ast.AST) -> Optional[Tuple[str, ...]]:
+    """Attribute/Name chain -> ('jax', 'numpy', 'sqrt'), or None."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return tuple(reversed(parts))
+    return None
+
+
+class _ModuleContext:
+    """Per-module alias table + the statically-visible traced-function set."""
+
+    def __init__(self, tree: ast.Module):
+        self.jnp_aliases: Set[str] = set()
+        self.np_aliases: Set[str] = set()
+        self.jax_aliases: Set[str] = set()
+        self.imports_jax = False
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    tgt = a.asname or a.name.split(".")[0]
+                    if a.name == "jax.numpy":
+                        self.jnp_aliases.add(a.asname or "jax.numpy")
+                        self.imports_jax = True
+                    elif a.name.split(".")[0] == "jax":
+                        self.jax_aliases.add(tgt)
+                        self.imports_jax = True
+                    elif a.name == "numpy":
+                        self.np_aliases.add(tgt)
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "jax":
+                    self.imports_jax = True
+                    for a in node.names:
+                        if a.name == "numpy":
+                            self.jnp_aliases.add(a.asname or "numpy")
+                elif node.module and node.module.split(".")[0] == "jax":
+                    self.imports_jax = True
+        self.traced: Set[str] = self._collect_traced(tree)
+
+    def _is_jit_expr(self, node: ast.AST) -> bool:
+        """jax.jit / jit, possibly through functools.partial(jax.jit, ...)."""
+        chain = _dotted(node)
+        if chain is not None:
+            return (self._is_jax_chain(chain, ("jit",))
+                    or chain == ("jit",))
+        if isinstance(node, ast.Call):
+            fchain = _dotted(node.func)
+            if fchain and fchain[-1] == "partial" and node.args:
+                return self._is_jit_expr(node.args[0])
+        return False
+
+    def _is_jax_chain(self, chain: Tuple[str, ...],
+                      tail: Tuple[str, ...]) -> bool:
+        return (len(chain) >= len(tail) + 1
+                and chain[0] in self.jax_aliases
+                and chain[-len(tail):] == tail)
+
+    def is_jnp_call(self, call: ast.Call) -> bool:
+        chain = _dotted(call.func)
+        if not chain or len(chain) < 2:
+            return False
+        head = ".".join(chain[:-1])
+        return (chain[0] in self.jnp_aliases or head in self.jnp_aliases
+                or (len(chain) >= 3 and chain[0] in self.jax_aliases
+                    and chain[1] == "numpy"))
+
+    def _collect_traced(self, tree: ast.Module) -> Set[str]:
+        """Function names that are statically visibly jit/trace-entered."""
+        traced: Set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if any(self._is_jit_expr(d) for d in node.decorator_list):
+                    traced.add(node.name)
+            elif isinstance(node, ast.Call):
+                chain = _dotted(node.func)
+                if chain is None:
+                    continue
+                fn_pos = _TRACE_TAILS.get(chain)
+                if fn_pos is None and chain[0] in self.jax_aliases:
+                    fn_pos = _TRACE_TAILS.get(chain[1:])
+                if fn_pos is None:
+                    continue
+                for i in fn_pos:
+                    if i < len(node.args) and isinstance(node.args[i],
+                                                         ast.Name):
+                        traced.add(node.args[i].id)
+        return traced
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, ctx: _ModuleContext, path: str):
+        self.ctx = ctx
+        self.path = path
+        self.findings: List[Finding] = []
+        self._loop_depth = 0
+        self._traced_depth = 0
+
+    def _flag(self, rule: str, node: ast.AST, message: str):
+        self.findings.append(Finding(rule, self.path, node.lineno,
+                                     node.col_offset, message))
+
+    # ------------------------------------------------------------ FLD101
+    def _check_test(self, node):
+        for sub in ast.walk(node.test):
+            if isinstance(sub, ast.Call) and self.ctx.is_jnp_call(sub):
+                chain = _dotted(sub.func)
+                self._flag("FLD101", node,
+                           f"branch condition calls "
+                           f"{'.'.join(chain)} — a traced array, not a "
+                           f"Python bool")
+                return
+
+    def visit_If(self, node):
+        self._check_test(node)
+        self.generic_visit(node)
+
+    def visit_While(self, node):
+        self._check_test(node)
+        self._loop(node)
+
+    # ------------------------------------------------------- loops / defs
+    def _loop(self, node):
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    def visit_For(self, node):
+        self._loop(node)
+
+    def visit_FunctionDef(self, node):
+        entering = (node.name in self.ctx.traced
+                    or any(self.ctx._is_jit_expr(d)
+                           for d in node.decorator_list))
+        # a def starts a fresh loop scope: a loop *around* a def does not
+        # unroll the def's body
+        saved_loops = self._loop_depth
+        self._loop_depth = 0
+        if entering:
+            self._traced_depth += 1
+        self.generic_visit(node)
+        if entering:
+            self._traced_depth -= 1
+        self._loop_depth = saved_loops
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # ------------------------------------------------------------ FLD106
+    def visit_ClassDef(self, node):
+        is_policy = any((_dotted(b) or ("",))[-1] == "BasePolicy"
+                        for b in node.bases)
+        if is_policy and node.name != "BasePolicy":
+            registered = False
+            for d in node.decorator_list:
+                tgt = d.func if isinstance(d, ast.Call) else d
+                if (_dotted(tgt) or ("",))[-1] == "register_policy":
+                    registered = True
+            if not registered:
+                self._flag("FLD106", node,
+                           f"policy class {node.name} subclasses BasePolicy "
+                           f"but is not @register_policy'd")
+        self.generic_visit(node)
+
+    # ------------------------------------------------------------- calls
+    def visit_Call(self, node):
+        chain = _dotted(node.func)
+        if self.ctx.is_jnp_call(node):
+            self._jnp_call(node, chain)
+        elif chain:
+            self._other_call(node, chain)
+        self.generic_visit(node)
+
+    def _jnp_call(self, node: ast.Call, chain):
+        fn = chain[-1]
+        if self._loop_depth > 0 and self._traced_depth > 0:
+            self._flag("FLD102", node,
+                       f"{'.'.join(chain)} inside a Python loop in a "
+                       f"jit-traced function — the loop unrolls into the "
+                       f"jaxpr")
+        if fn in _FLOAT_FACTORIES:
+            dtype_pos = _FLOAT_FACTORIES[fn]
+            has_dtype = (any(k.arg == "dtype" for k in node.keywords)
+                         or len(node.args) > dtype_pos)
+            if not has_dtype:
+                self._flag("FLD104", node,
+                           f"jnp.{fn}(...) without dtype — float64 under "
+                           f"x64, float32 otherwise; never the config's "
+                           f"param_dtype")
+
+    def _other_call(self, node: ast.Call, chain):
+        head, fn = chain[0], chain[-1]
+        np_call = head in self.ctx.np_aliases and len(chain) == 2
+        if np_call and self.ctx.imports_jax and fn in _NP_FLOAT_OPS:
+            self._flag("FLD103", node,
+                       f"np.{fn}() returns a strong np.float64 scalar that "
+                       f"upcasts any jax array it meets under x64")
+        if self._traced_depth > 0:
+            if np_call and fn in _HOST_SYNC_NP:
+                self._flag("FLD105", node,
+                           f"np.{fn}() inside a jit-traced function")
+            elif (self.ctx._is_jax_chain(chain, ("device_get",))):
+                self._flag("FLD105", node,
+                           "jax.device_get inside a jit-traced function")
+            elif (isinstance(node.func, ast.Attribute)
+                  and node.func.attr == "item" and not node.args):
+                self._flag("FLD105", node,
+                           ".item() inside a jit-traced function")
+        if self.ctx._is_jit_expr(node.func) and node.args:
+            self._check_donate(node)
+
+    # ------------------------------------------------------------ FLD107
+    _STEPISH = re.compile(r"(^|_)(step|prefill|decode|insert)(_|$)|"
+                          r"^make_\w*step$")
+
+    def _check_donate(self, node: ast.Call):
+        if any(k.arg in ("donate_argnums", "donate_argnames")
+               for k in node.keywords):
+            return
+        target = node.args[0]
+        name = None
+        if isinstance(target, ast.Call):
+            tchain = _dotted(target.func)
+            name = tchain[-1] if tchain else None
+        elif isinstance(target, ast.Name):
+            name = target.id
+        if name and self._STEPISH.search(name):
+            self._flag("FLD107", node,
+                       f"jax.jit({name}) without a donation declaration")
+
+
+def _suppressions(text: str):
+    """(file-level rule set, {lineno: rule set}); 'all' suppresses any."""
+    file_rules: Set[str] = set()
+    line_rules: Dict[int, Set[str]] = {}
+    for i, line in enumerate(text.splitlines(), start=1):
+        m = _SUPPRESS_FILE.search(line)
+        if m and i <= 10:
+            file_rules |= {r.strip().upper() for r in m.group(1).split(",")}
+        m = _SUPPRESS_LINE.search(line)
+        if m:
+            line_rules[i] = {r.strip().upper() for r in m.group(1).split(",")}
+    return file_rules, line_rules
+
+
+def lint_source(text: str, path: str = "<string>") -> List[Finding]:
+    """Lint one module's source text. Returns unsuppressed findings."""
+    try:
+        tree = ast.parse(text)
+    except SyntaxError as e:
+        return [Finding("FLD101", path, e.lineno or 0, 0,
+                        f"syntax error: {e.msg}")]
+    ctx = _ModuleContext(tree)
+    v = _Visitor(ctx, path)
+    v.visit(tree)
+    file_rules, line_rules = _suppressions(text)
+    out = []
+    for f in v.findings:
+        sup = file_rules | line_rules.get(f.line, set())
+        if "ALL" in sup or f.rule in sup:
+            continue
+        out.append(f)
+    return out
+
+
+def iter_py_files(paths: Sequence[str]) -> List[Path]:
+    files: List[Path] = []
+    for p in paths:
+        pth = Path(p)
+        if pth.is_dir():
+            files.extend(sorted(f for f in pth.rglob("*.py")
+                                if "__pycache__" not in f.parts))
+        elif pth.suffix == ".py":
+            files.append(pth)
+    return files
+
+
+def lint_paths(paths: Sequence[str]) -> List[Finding]:
+    out: List[Finding] = []
+    for f in iter_py_files(paths):
+        out.extend(lint_source(f.read_text(), str(f)))
+    return out

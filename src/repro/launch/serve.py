@@ -37,8 +37,10 @@ def serve(cfg, batch=2, prompt_len=16, gen_len=16, mla_absorb=False,
             rng.randn(batch, prompt_len, cfg.d_model).astype(np.float32)
             * 0.1).astype(cfg.dtype)
 
-    prefill = jax.jit(make_prefill_step(cfg, cache_len=prompt_len + gen_len))
-    step = jax.jit(make_serve_step(cfg, mla_absorb=mla_absorb))
+    prefill = jax.jit(make_prefill_step(cfg, cache_len=prompt_len + gen_len),
+                      donate_argnums=shlib.donate_args())
+    step = jax.jit(make_serve_step(cfg, mla_absorb=mla_absorb),
+                   donate_argnums=shlib.donate_args(1))
 
     t0 = time.perf_counter()
     logits, caches = prefill(params, batch_in)

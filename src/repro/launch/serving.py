@@ -268,9 +268,14 @@ class ServeEngine:
                 body, (caches, tok, pos), None, length=self.chunk)
             return caches, tok, pos, jnp.moveaxis(toks, 0, 1)   # (B, chunk)
 
-        self._prefill = jax.jit(prefill)
-        self._insert = jax.jit(insert)
-        self._decode = jax.jit(decode)
+        # old caches are dead once insert/decode return their successors;
+        # params and the mask bank live across calls (never donated).
+        self._prefill = jax.jit(prefill,
+                                donate_argnums=shlib.donate_args())
+        self._insert = jax.jit(insert,
+                               donate_argnums=shlib.donate_args(0))
+        self._decode = jax.jit(decode,
+                               donate_argnums=shlib.donate_args(1))
 
     def _call(self, fn, *args):
         with shlib.serve_kernels_context(**self._kernels):

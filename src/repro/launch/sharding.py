@@ -120,6 +120,20 @@ def train_kernels_context(ffn: bool = False, interpret: bool = True):
         _STATE.train_kernels = prev
 
 
+def donate_args(*indices: int):
+    """Buffer-donation indices for jit'd step functions, gated on backend.
+
+    CPU (and interpret-mode) executables don't support donation — XLA just
+    warns and copies — so return () there and the real indices elsewhere.
+    Call sites stay declarative: ``donate_argnums=donate_args(0, 1)`` names
+    exactly which args are dead after the call (an empty call,
+    ``donate_args()``, documents that nothing is donatable).
+    """
+    if jax.default_backend() == "cpu":
+        return ()
+    return indices
+
+
 def batch_axes(mesh: Mesh):
     names = mesh.axis_names
     return tuple(a for a in ("pod", "data") if a in names)

@@ -49,7 +49,8 @@ def run_plain(cfg, steps, batch, seq, log_every=10, ckpt=None):
     params = model_lib.init_params(cfg, key)
     opt = make_optimizer(cfg.optimizer)
     opt_state = opt.init(params)
-    step_fn = jax.jit(make_train_step(cfg))
+    step_fn = jax.jit(make_train_step(cfg),
+                      donate_argnums=shlib.donate_args(0, 1))
     rng = np.random.RandomState(0)
     losses = []
     for i in range(steps):
@@ -75,8 +76,12 @@ def run_fluid(cfg, steps, batch, seq, rate=None, calibrate_every=5,
     params = model_lib.init_params(cfg, key)
     opt = make_optimizer(cfg.optimizer)
     opt_state = opt.init(params)
-    full_step = jax.jit(make_train_step(cfg))
-    masked_step = jax.jit(make_train_step(cfg, with_masks=True))
+    # params can't be donated here: prev_params aliases them across steps
+    # for the invariant-unit statistics. opt_state is dead after each call.
+    full_step = jax.jit(make_train_step(cfg),
+                        donate_argnums=shlib.donate_args(1))
+    masked_step = jax.jit(make_train_step(cfg, with_masks=True),
+                          donate_argnums=shlib.donate_args(1))
     rng = np.random.RandomState(0)
 
     r = rate or pick_rate(straggler_slowdown)

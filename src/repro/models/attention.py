@@ -9,9 +9,10 @@ for the whole stack as (B, C) int32 (-1 = empty).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.launch.sharding import (decode_cache_mode, serve_kernel_flags,
@@ -88,7 +89,7 @@ def attn_seq(p, x, cfg: ModelConfig, positions, window=None, unroll=False,
     kv_override: (k, v) for cross-attention (no rope re-application here).
     """
     B, S, _ = x.shape
-    scale = 1.0 / np.sqrt(cfg.head_dim)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
     if kv_override is None:
         q, k, v = _qkv(p, x, cfg, positions)
         kv_pos = positions
@@ -156,7 +157,7 @@ def attn_decode(p, x, cfg: ModelConfig, cache, slot_pos, pos, window=None):
     dt = cdtype(cfg)
     B = x.shape[0]
     C = cache["k"].shape[1]
-    scale = 1.0 / np.sqrt(cfg.head_dim)
+    scale = 1.0 / math.sqrt(cfg.head_dim)
     # decode: leave q unconstrained so GSPMD follows the CACHE's sharding
     # (sequence-sharded cache => partial scores + stat psums, no gathers)
     q, k_new, v_new = _qkv(p, x, cfg, pos[:, None], constrain_heads=False)

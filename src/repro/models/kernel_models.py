@@ -26,16 +26,17 @@ core/submodel.expand_indices).
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.masked_attn import masked_attention
 from repro.kernels.masked_ffn import masked_ffn_batch
 
 
 def _dense(key, fan_in, shape):
-    return jax.random.normal(key, shape) * (1.0 / np.sqrt(fan_in))
+    return jax.random.normal(key, shape) * (1.0 / math.sqrt(fan_in))
 
 
 def _flat(x):
@@ -67,7 +68,8 @@ class KernelMLP:
             "enc": _dense(ks[0], 784, (784, d)),
             "ffn": {"w_in": _dense(ks[1], d, (d, F)),
                     "w_out": _dense(ks[2], F, (F, d))},
-            "out": {"w": _dense(ks[3], d, (d, 62)), "b": jnp.zeros((62,))},
+            "out": {"w": _dense(ks[3], d, (d, 62)),
+                    "b": jnp.zeros((62,), jnp.float32)},
         }
 
     @staticmethod
@@ -137,7 +139,8 @@ class KernelAttnClassifier:
                      "wo": _dense(ks[4], d, (d, d))},
             "ffn": {"w_in": _dense(ks[5], d, (d, F)),
                     "w_out": _dense(ks[6], F, (F, d))},
-            "out": {"w": _dense(ks[7], d, (d, 62)), "b": jnp.zeros((62,))},
+            "out": {"w": _dense(ks[7], d, (d, 62)),
+                    "b": jnp.zeros((62,), jnp.float32)},
         }
 
     @staticmethod
@@ -149,7 +152,7 @@ class KernelAttnClassifier:
         q = (x2 @ p["wq"]).reshape(B, S, H, hd)
         k = (x2 @ p["wk"]).reshape(B, S, H, hd)
         v = (x2 @ p["wv"]).reshape(B, S, H, hd)
-        s = jnp.einsum("bqhe,bkhe->bhqk", q, k) / jnp.sqrt(float(hd))
+        s = jnp.einsum("bqhe,bkhe->bhqk", q, k) * (1.0 / math.sqrt(hd))
         causal = jnp.tril(jnp.ones((S, S), bool))
         s = jnp.where(causal[None, None], s, -1e30)
         probs = jax.nn.softmax(s, axis=-1)

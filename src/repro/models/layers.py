@@ -1,6 +1,8 @@
 """Shared layer primitives: norms, RoPE, embeddings, FFN variants."""
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -22,7 +24,7 @@ def pdtype(cfg: ModelConfig):
 # init helpers
 
 def dense_init(key, fan_in, *shape, dtype):
-    scale = 1.0 / np.sqrt(fan_in)
+    scale = 1.0 / math.sqrt(fan_in)
     return (jax.random.normal(key, shape) * scale).astype(dtype)
 
 

@@ -12,9 +12,10 @@ Two decode paths:
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.launch.sharding import shard
@@ -76,7 +77,7 @@ def _attend(p, q_nope, q_rope, c_kv, k_rope, cfg, q_pos, kv_pos):
     """Baseline attention: expand k,v from latent. Shapes:
     q_*: (B,Sq,H,·)  c_kv: (B,T,lora)  k_rope: (B,T,rope)."""
     dt = cdtype(cfg)
-    scale = 1.0 / np.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+    scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
     k_nope = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uk"].astype(dt))
     v = jnp.einsum("btr,rhk->bthk", c_kv, p["w_uv"].astype(dt))
     s = (jnp.einsum("bqhk,bthk->bhqt", q_nope, k_nope)
@@ -131,7 +132,7 @@ def mla_decode(p, x, cfg: ModelConfig, cache, slot_pos, pos, absorb=False):
     if not absorb:
         y = _attend(p, q_nope, q_rope, ckv, krope, cfg, pos[:, None], new_slots)
     else:
-        scale = 1.0 / np.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
+        scale = 1.0 / math.sqrt(cfg.qk_nope_dim + cfg.qk_rope_dim)
         # absorb W_uk into q, attend in latent space, then W_uv on the output
         q_eff = jnp.einsum("bqhk,rhk->bqhr", q_nope, p["w_uk"].astype(dt))
         s = (jnp.einsum("bqhr,btr->bhqt", q_eff, ckv)

@@ -35,7 +35,7 @@ def init_rglru(key, cfg: ModelConfig):
         "w_out": dense_init(ks[2], w, w, d, dtype=pd),
         "conv_w": 0.1 * jax.random.normal(ks[3], (cfg.conv1d_width, w), pd),
         "conv_b": jnp.zeros((w,), pd),
-        "a_param": jnp.asarray(jnp.linspace(0.9, 4.0, w), pd),  # softplus arg
+        "a_param": jnp.linspace(0.9, 4.0, w, dtype=pd),  # softplus arg
         "w_a": 0.1 * jax.random.normal(ks[4], (w,), pd),
         "b_a": jnp.zeros((w,), pd),
         "w_i": 0.1 * jax.random.normal(jax.random.fold_in(ks[4], 1), (w,), pd),

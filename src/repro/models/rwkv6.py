@@ -37,8 +37,7 @@ def init_tmix(key, cfg: ModelConfig):
         "lora_mix_a": dense_init(ks[0], d, d, 5 * LORA_MIX, dtype=pd),
         "lora_mix_b": (jnp.zeros((5, LORA_MIX, d), pd)
                        + 1e-3 * jax.random.normal(ks[1], (5, LORA_MIX, d), pd)),
-        "w_decay": jnp.asarray(
-            jnp.linspace(-6.0, -1.0, d), pd),           # w0: resting decay
+        "w_decay": jnp.linspace(-6.0, -1.0, d, dtype=pd),  # w0: resting decay
         "lora_w_a": dense_init(ks[2], d, d, LORA_DECAY, dtype=pd),
         "lora_w_b": 1e-3 * jax.random.normal(ks[3], (LORA_DECAY, d), pd),
         "w_u": jax.random.normal(ks[4], (d,), pd) * 0.1,  # bonus

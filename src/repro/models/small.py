@@ -19,15 +19,13 @@ size * tile_factor; kept indices expand to {t*size + i}.
 from __future__ import annotations
 
 import math
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 
 def _dense(key, fan_in, shape):
-    return jax.random.normal(key, shape) * (1.0 / np.sqrt(fan_in))
+    return jax.random.normal(key, shape) * (1.0 / math.sqrt(fan_in))
 
 
 def _conv(x, w, b):
@@ -66,13 +64,13 @@ class FemnistCNN:
         ks = jax.random.split(key, 4)
         return {
             "conv1": {"w": _dense(ks[0], 25, (5, 5, 1, 16)),
-                      "b": jnp.zeros((16,))},
+                      "b": jnp.zeros((16,), jnp.float32)},
             "conv2": {"w": _dense(ks[1], 25 * 16, (5, 5, 16, 64)),
-                      "b": jnp.zeros((64,))},
+                      "b": jnp.zeros((64,), jnp.float32)},
             "fc1": {"w": _dense(ks[2], 7 * 7 * 64, (7 * 7 * 64, 120)),
-                    "b": jnp.zeros((120,))},
+                    "b": jnp.zeros((120,), jnp.float32)},
             "out": {"w": _dense(ks[3], 120, (120, 62)),
-                    "b": jnp.zeros((62,))},
+                    "b": jnp.zeros((62,), jnp.float32)},
         }
 
     @staticmethod
@@ -117,13 +115,13 @@ class Vgg9:
         p = {}
         for i, (n, ci, co) in enumerate(Vgg9._CONVS):
             p[n] = {"w": _dense(ks[i], 9 * ci, (3, 3, ci, co)),
-                    "b": jnp.zeros((co,))}
+                    "b": jnp.zeros((co,), jnp.float32)}
         p["fc1"] = {"w": _dense(ks[6], 4 * 4 * 128, (4 * 4 * 128, 512)),
-                    "b": jnp.zeros((512,))}
+                    "b": jnp.zeros((512,), jnp.float32)}
         p["fc2"] = {"w": _dense(ks[7], 512, (512, 256)),
-                    "b": jnp.zeros((256,))}
+                    "b": jnp.zeros((256,), jnp.float32)}
         p["out"] = {"w": _dense(ks[8], 256, (256, 10)),
-                    "b": jnp.zeros((10,))}
+                    "b": jnp.zeros((10,), jnp.float32)}
         return p
 
     @staticmethod
@@ -166,11 +164,12 @@ class ShakespeareLSTM:
             "embed": _dense(ks[0], E, (V, E)),
             "lstm1": {"W": _dense(ks[1], E, (E, 4 * H)),
                       "U": _dense(ks[2], H, (H, 4 * H)),
-                      "b": jnp.zeros((4 * H,))},
+                      "b": jnp.zeros((4 * H,), jnp.float32)},
             "lstm2": {"W": _dense(ks[3], H, (H, 4 * H)),
                       "U": _dense(ks[4], H, (H, 4 * H)),
-                      "b": jnp.zeros((4 * H,))},
-            "out": {"w": _dense(ks[5], H, (H, V)), "b": jnp.zeros((V,))},
+                      "b": jnp.zeros((4 * H,), jnp.float32)},
+            "out": {"w": _dense(ks[5], H, (H, V)),
+                    "b": jnp.zeros((V,), jnp.float32)},
         }
 
     @staticmethod
@@ -186,7 +185,7 @@ class ShakespeareLSTM:
             c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
             h = jax.nn.sigmoid(o) * jnp.tanh(c)
             return (h, c), h
-        init = (jnp.zeros((B, H)), jnp.zeros((B, H)))
+        init = (jnp.zeros((B, H), xs.dtype), jnp.zeros((B, H), xs.dtype))
         (_, _), hs = jax.lax.scan(step, init, xs.transpose(1, 0, 2))
         return hs.transpose(1, 0, 2)
 

@@ -1,0 +1,246 @@
+"""Static-analysis layer tests (src/repro/analysis/, DESIGN.md §11).
+
+Three families:
+  * lint fixtures — every rule gets a true-positive snippet, a clean twin
+    (the idiom the fix-it recommends), and a suppressed twin, all through
+    lint_source so no files are written;
+  * the repo itself lints clean (the gate CI enforces);
+  * dynamic contracts — the jaxpr walker catches planted f64 values and
+    host callbacks, the fleet cohort program stays single-trace under
+    mixed (lr, n_steps) and changing mask contents, and a small
+    NaN-poisoned masked_ffn proves dropped-block dW is bitwise zero.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import contracts
+from repro.analysis.lint import RULES, lint_paths, lint_source
+
+# ---------------------------------------------------------------------------
+# lint fixtures: (rule, bad snippet, clean twin)
+
+FIXTURES = {
+    "FLD101": (
+        "import jax\nimport jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    if jnp.any(x > 0):\n"
+        "        return x\n"
+        "    return -x\n",
+        "import jax\nimport jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    return jnp.where(jnp.any(x > 0), x, -x)\n",
+    ),
+    "FLD102": (
+        "import jax\nimport jax.numpy as jnp\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    for i in range(8):\n"
+        "        x = jnp.sin(x)\n"
+        "    return x\n",
+        # same loop OUTSIDE any traced function: no finding
+        "import jax\nimport jax.numpy as jnp\n"
+        "def f(x):\n"
+        "    for i in range(8):\n"
+        "        x = jnp.sin(x)\n"
+        "    return x\n",
+    ),
+    "FLD103": (
+        "import jax\nimport numpy as np\n"
+        "def f(fan_in):\n"
+        "    return 1.0 / np.sqrt(fan_in)\n",
+        "import jax\nimport math\n"
+        "def f(fan_in):\n"
+        "    return 1.0 / math.sqrt(fan_in)\n",
+    ),
+    "FLD104": (
+        "import jax.numpy as jnp\n"
+        "def f(d):\n"
+        "    return jnp.zeros((d,))\n",
+        "import jax.numpy as jnp\n"
+        "def f(d):\n"
+        "    return jnp.zeros((d,), jnp.float32)\n",
+    ),
+    "FLD105": (
+        "import jax\nimport numpy as np\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return np.asarray(x).sum()\n",
+        "import jax\nimport numpy as np\n"
+        "@jax.jit\n"
+        "def f(x):\n"
+        "    return x.sum()\n",
+    ),
+    "FLD106": (
+        "from repro.core.dropout import BasePolicy\n"
+        "class MyPolicy(BasePolicy):\n"
+        "    pass\n",
+        "from repro.core.dropout import BasePolicy, register_policy\n"
+        "@register_policy('mine')\n"
+        "class MyPolicy(BasePolicy):\n"
+        "    pass\n",
+    ),
+    "FLD107": (
+        "import jax\n"
+        "step = jax.jit(make_train_step(cfg))\n",
+        "import jax\n"
+        "step = jax.jit(make_train_step(cfg), donate_argnums=())\n",
+    ),
+}
+
+
+@pytest.mark.parametrize("rule", sorted(FIXTURES))
+def test_lint_true_positive(rule):
+    bad, _ = FIXTURES[rule]
+    hits = [f for f in lint_source(bad, f"fix_{rule}.py") if f.rule == rule]
+    assert hits, f"{rule} fixture produced no finding"
+
+
+@pytest.mark.parametrize("rule", sorted(FIXTURES))
+def test_lint_clean_twin(rule):
+    _, good = FIXTURES[rule]
+    hits = lint_source(good, f"clean_{rule}.py")
+    assert hits == [], f"clean twin of {rule} was flagged: {hits}"
+
+
+@pytest.mark.parametrize("rule", sorted(FIXTURES))
+def test_lint_suppression(rule):
+    bad, _ = FIXTURES[rule]
+    lines = bad.splitlines()
+    flagged = {f.line for f in lint_source(bad, "x.py") if f.rule == rule}
+    patched = "\n".join(
+        ln + (f"  # fluidlint: disable={rule}" if i + 1 in flagged else "")
+        for i, ln in enumerate(lines))
+    assert [f for f in lint_source(patched, "x.py") if f.rule == rule] == []
+
+
+def test_file_level_suppression():
+    bad = FIXTURES["FLD104"][0]
+    patched = "# fluidlint: disable-file=FLD104\n" + bad
+    assert lint_source(patched, "x.py") == []
+
+
+def test_weak_float_literals_not_flagged():
+    src = ("import jax.numpy as jnp\n"
+           "def f(x):\n"
+           "    return x * 0.5 + 1e-6\n")
+    assert lint_source(src, "x.py") == []
+
+
+def test_every_rule_has_fixture():
+    assert set(FIXTURES) == set(RULES)
+
+
+def test_repo_lints_clean():
+    assert lint_paths(["src"]) == []
+
+
+def test_cli_smoke(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+    bad = tmp_path / "bad.py"
+    bad.write_text(FIXTURES["FLD104"][0])
+    assert main(["--lint", str(bad)]) == 1
+    assert "FLD104" in capsys.readouterr().out
+    good = tmp_path / "good.py"
+    good.write_text(FIXTURES["FLD104"][1])
+    assert main(["--lint", str(good)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walker
+
+def test_walker_catches_f64():
+    def f(x):
+        return x * np.float64(2.0)        # strong f64 scalar upcasts x
+
+    from jax.experimental import enable_x64
+    with enable_x64():
+        jaxpr = jax.make_jaxpr(f)(jax.ShapeDtypeStruct((4,), jnp.float32))
+    assert contracts.walk_jaxpr(jaxpr)["f64"]
+
+
+def test_walker_recurses_into_scan():
+    def f(x):
+        def body(c, _):
+            # f64 appears in the scanned output, not the carry (scan
+            # rejects carry dtype changes before the walker would see them)
+            return c, c * np.float64(2.0)
+        _, ys = jax.lax.scan(body, x, None, length=3)
+        return ys
+
+    from jax.experimental import enable_x64
+    with enable_x64():
+        jaxpr = jax.make_jaxpr(f)(jax.ShapeDtypeStruct((4,), jnp.float32))
+    assert contracts.walk_jaxpr(jaxpr)["f64"]
+
+
+def test_walker_catches_callback():
+    def f(x):
+        return jax.pure_callback(
+            lambda a: np.asarray(a) * 2,
+            jax.ShapeDtypeStruct((4,), jnp.float32), x)
+
+    jaxpr = jax.make_jaxpr(f)(jax.ShapeDtypeStruct((4,), jnp.float32))
+    assert contracts.walk_jaxpr(jaxpr)["callback"]
+
+
+def test_walker_clean_program():
+    def f(x):
+        return jnp.sin(x) * 0.5
+
+    from jax.experimental import enable_x64
+    with enable_x64():
+        jaxpr = jax.make_jaxpr(f)(jax.ShapeDtypeStruct((4,), jnp.float32))
+    hits = contracts.walk_jaxpr(jaxpr)
+    assert hits["f64"] == [] and hits["callback"] == []
+
+
+# ---------------------------------------------------------------------------
+# dynamic contracts
+
+def test_optimizers_no_f64():
+    assert contracts.check_optim_no_f64() == []
+
+
+def test_models_no_f64():
+    assert contracts.check_models_no_f64() == []
+
+
+def test_fleet_single_trace_mixed_hparams():
+    """Regression: mixed (lr, n_steps) + changed mask contents must reuse
+    one compiled cohort program (the summary-level claim of DESIGN.md §8)."""
+    assert contracts.check_fleet_single_trace() == []
+
+
+def test_dropped_dw_bitwise_zero_small():
+    """One small NaN-poisoned masked_ffn case inline (the full per-config
+    sweep runs in `python -m repro.analysis --contracts`)."""
+    from repro.kernels.masked_ffn import masked_ffn
+    d, F, M = 8, 256, 4
+    block_mask = jnp.asarray([1.0, 0.0])
+    dropped = np.repeat(np.array([False, True]), 128)
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(M, d).astype(np.float32))
+    w_in = rng.randn(d, F).astype(np.float32)
+    w_out = rng.randn(F, d).astype(np.float32)
+    w_in[:, dropped] = np.nan
+    w_out[dropped, :] = np.nan
+
+    y = masked_ffn(x, jnp.asarray(w_in), jnp.asarray(w_out), block_mask,
+                   act="gelu", interpret=True)
+    assert np.isfinite(np.asarray(y)).all()
+
+    def loss(wi, wo):
+        return jnp.sum(masked_ffn(x, wi, wo, block_mask, act="gelu",
+                                  interpret=True))
+    dwi, dwo = jax.grad(loss, argnums=(0, 1))(jnp.asarray(w_in),
+                                              jnp.asarray(w_out))
+    assert (np.asarray(dwi)[:, dropped] == 0.0).all()
+    assert (np.asarray(dwo)[dropped, :] == 0.0).all()
+    assert np.isfinite(np.asarray(dwi)[:, ~dropped]).all()
+
+
+def test_kernel_contracts_clean():
+    from repro.analysis.kernel_contracts import run_kernel_contracts
+    assert run_kernel_contracts() == []
