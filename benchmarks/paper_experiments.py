@@ -11,9 +11,21 @@ from typing import Dict, Sequence
 
 import numpy as np
 
-from repro.fl.simulation import build_simulation
+from repro.fl.simulation import (CohortConfig, SimulationConfig,
+                                 build_simulation)
 
 METHODS = ("random", "ordered", "invariant")
+
+
+def _sim(workload, *, n_clients=5, straggler_ids=(0,), method="invariant",
+         fixed_rate=None, straggler_frac=None, n_data=400, slow_factor=1.3,
+         seed=0):
+    """All paper drivers build through one typed-config helper."""
+    return build_simulation(SimulationConfig(
+        workload=workload, policy=method, fixed_rate=fixed_rate,
+        straggler_frac=straggler_frac, seed=seed,
+        cohort=CohortConfig(n_clients=n_clients, straggler_ids=straggler_ids,
+                            n_data=n_data, slow_factor=slow_factor)))
 
 
 def table2_accuracy(workload="femnist", rates=(0.75,), rounds=8,
@@ -25,9 +37,8 @@ def table2_accuracy(workload="femnist", rates=(0.75,), rounds=8,
         for m in METHODS:
             accs = []
             for s in seeds:
-                sim = build_simulation(workload, n_clients=n_clients,
-                                       straggler_ids=(0,), method=m,
-                                       fixed_rate=r, n_data=n_data, seed=s)
+                sim = _sim(workload, n_clients=n_clients, method=m,
+                           fixed_rate=r, n_data=n_data, seed=s)
                 hist = sim.server.run(rounds, eval_every=rounds)
                 accs.append(hist[-1].accuracy)
             out[(m, r)] = (float(np.mean(accs)), float(np.std(accs)))
@@ -37,9 +48,7 @@ def table2_accuracy(workload="femnist", rates=(0.75,), rounds=8,
 def fig4a_straggler_time(workload="femnist", rounds=6, n_data=400,
                          slow_factor=1.3, seed=0) -> Dict:
     """Fig 4a: straggler round time lands near T_target after FLuID."""
-    sim = build_simulation(workload, n_clients=5, straggler_ids=(0,),
-                           method="invariant", n_data=n_data,
-                           slow_factor=slow_factor, seed=seed)
+    sim = _sim(workload, n_data=n_data, slow_factor=slow_factor, seed=seed)
     hist = sim.server.run(rounds)
     before = [h for h in hist if not h.rates]
     after = [h for h in hist if h.rates]
@@ -58,8 +67,7 @@ def fig4b_dynamic_stragglers(workload="femnist", rounds=12, n_data=400,
     """Fig 4b: a different client becomes slow mid-run; FLuID re-adapts.
     Compares total time: no-dropout vs static-straggler vs dynamic FLuID."""
     def run(method, dynamic_policy):
-        sim = build_simulation(workload, n_clients=5, straggler_ids=(0,),
-                               method=method, n_data=n_data, seed=seed)
+        sim = _sim(workload, method=method, n_data=n_data, seed=seed)
         total, switched = 0.0, False
         for i in range(rounds):
             if i == rounds // 2 and not switched:
@@ -86,8 +94,7 @@ def fig4b_dynamic_stragglers(workload="femnist", rounds=12, n_data=400,
 def fig6_invariant_evolution(workload="femnist", rounds=10, n_data=400,
                              seed=0) -> Dict:
     """Fig 6 / App A.1: invariant fraction grows over training."""
-    sim = build_simulation(workload, n_clients=5, straggler_ids=(0,),
-                           method="invariant", n_data=n_data, seed=seed)
+    sim = _sim(workload, n_data=n_data, seed=seed)
     hist = sim.server.run(rounds)
     fr = [h.invariant_frac for h in hist]
     return {"invariant_frac_by_round": fr,
@@ -99,8 +106,7 @@ def table3_threshold(workload="femnist", rounds=6, n_data=400,
                      thresholds=(0.01, 0.03, 0.05, 0.1), seed=0) -> Dict:
     """Table 3 / App A.2: higher threshold -> more invariant neurons."""
     from repro.core import invariant as inv
-    sim = build_simulation(workload, n_clients=5, straggler_ids=(0,),
-                           method="invariant", n_data=n_data, seed=seed)
+    sim = _sim(workload, n_data=n_data, seed=seed)
     sim.server.run(rounds)
     # recompute per-client stats at the last round
     import jax
@@ -124,10 +130,9 @@ def fig5_scalability(workload="femnist", n_clients=10, straggler_frac=0.2,
     k = max(1, int(n_clients * straggler_frac))
     out = {}
     for m in METHODS + ("none",):
-        sim = build_simulation(workload, n_clients=n_clients,
-                               straggler_ids=tuple(range(k)), method=m,
-                               straggler_frac=straggler_frac,
-                               n_data=n_data, seed=seed)
+        sim = _sim(workload, n_clients=n_clients,
+                   straggler_ids=tuple(range(k)), method=m,
+                   straggler_frac=straggler_frac, n_data=n_data, seed=seed)
         hist = sim.server.run(rounds, eval_every=rounds)
         out[m] = {"accuracy": hist[-1].accuracy,
                   "mean_round_time": float(np.mean(
@@ -148,8 +153,7 @@ def insight_oneshot_pruning(workload="femnist", rounds=15, n_data=1500,
     from repro.core import submodel as sm
     from repro.core.dropout import DropoutPolicy
 
-    sim = build_simulation(workload, n_clients=5, straggler_ids=(0,),
-                           method="none", n_data=n_data, seed=seed)
+    sim = _sim(workload, method="none", n_data=n_data, seed=seed)
     sim.server.run(rounds)
     params = sim.server.params
     specs = sim.model_cls.UNIT_SPECS

@@ -87,7 +87,8 @@ def bench_fleet_scaling(out_path=None):
 
     import jax
 
-    from repro.fl.simulation import build_simulation
+    from repro.fl.simulation import (CohortConfig, SimulationConfig,
+                                     build_simulation)
 
     out_path = out_path or (pathlib.Path(__file__).resolve().parent.parent
                             / "BENCH_fleet.json")
@@ -98,10 +99,10 @@ def bench_fleet_scaling(out_path=None):
     for n in fleet_sizes:
         row = {"n_clients": n}
         for backend in ("sequential", "fleet"):
-            sim = build_simulation(
-                "femnist", n_clients=n, straggler_ids=(0,),
-                method="invariant", n_data=per_client * n, seed=0,
-                backend=backend)
+            sim = build_simulation(SimulationConfig(
+                workload="femnist", backend=backend, policy="invariant",
+                seed=0, cohort=CohortConfig(n_clients=n, straggler_ids=(0,),
+                                            n_data=per_client * n)))
             t0 = time.perf_counter()
             sim.server.run(rounds)
             row[f"{backend}_s"] = round(time.perf_counter() - t0, 3)

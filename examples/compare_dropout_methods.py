@@ -10,15 +10,16 @@ Run:  PYTHONPATH=src python examples/compare_dropout_methods.py [rounds]
 """
 import sys
 
-from repro.fl.simulation import build_simulation
+from repro.fl.simulation import (CohortConfig, SimulationConfig,
+                                 build_simulation)
 
 rounds = int(sys.argv[1]) if len(sys.argv) > 1 else 15
 rate = 0.75
 
 print(f"sub-model size r={rate}, {rounds} rounds, 5 clients, 1 straggler")
 for method in ("random", "ordered", "invariant"):
-    sim = build_simulation("femnist", n_clients=5, straggler_ids=(0,),
-                           method=method, fixed_rate=rate, n_data=1200,
-                           seed=0)
+    sim = build_simulation(SimulationConfig(
+        workload="femnist", policy=method, fixed_rate=rate, seed=0,
+        cohort=CohortConfig(n_clients=5, straggler_ids=(0,), n_data=1200)))
     hist = sim.server.run(rounds, eval_every=rounds)
     print(f"  {method:10s} final accuracy = {hist[-1].accuracy:.3f}")

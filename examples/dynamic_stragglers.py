@@ -6,10 +6,12 @@ per-epoch recalibration detects the change and re-targets the sub-model.
 
 Run:  PYTHONPATH=src python examples/dynamic_stragglers.py
 """
-from repro.fl.simulation import build_simulation
+from repro.fl.simulation import (CohortConfig, SimulationConfig,
+                                 build_simulation)
 
-sim = build_simulation("femnist", n_clients=5, straggler_ids=(0,),
-                       method="invariant", n_data=500, seed=0)
+sim = build_simulation(SimulationConfig(
+    workload="femnist", policy="invariant", seed=0,
+    cohort=CohortConfig(n_clients=5, straggler_ids=(0,), n_data=500)))
 
 print("phase 1: client 0 is the straggler")
 for _ in range(4):

@@ -302,6 +302,96 @@ def check_serve_single_trace(arch="stablelm-12b") -> List[Violation]:
     return out
 
 
+def check_population_single_trace() -> List[Violation]:
+    """The sharded cohort program compiles once across population rounds:
+    each round samples a DIFFERENT cohort from the store, but shard shapes
+    are constant (equal-size partitions), so the (S, Cs, ...) program must
+    never re-trace. Uses policy='none' to hold the mask-bank row count at
+    1 — bank rows are legitimately shape and change only on calibration."""
+    from repro.fl import shard_fleet
+    from repro.fl.population import PopulationConfig, build_population
+    cfg = PopulationConfig(n_clients=512, cohort_size=4, workload="synth",
+                           backend="sharded_fleet", n_shards=2,
+                           policy="none", n_partitions=8,
+                           samples_per_partition=20, seed=0)
+    sim = build_population(cfg)
+    before = set(shard_fleet._SHARDED_CACHE)
+    # Round 0 feeds host-resident init params; round 1+ params carry the
+    # program's replicated NamedSharding, which legitimately costs one
+    # extra compile. Steady state starts at round 1: from there the cache
+    # must not grow, whatever cohort gets sampled.
+    sim.run(2)
+    new = [k for k in shard_fleet._SHARDED_CACHE if k not in before]
+    if len(new) != 1:
+        return [Violation("single-trace-population",
+                          "ShardedFleetEngine program cache",
+                          f"{len(new)} sharded programs built for one "
+                          f"(model, mesh, S) (want 1)")]
+    fn = shard_fleet._SHARDED_CACHE[new[0]]
+    n0 = fn._cache_size()
+    sim.run(2)                       # two more rounds, two more cohorts
+    n = fn._cache_size()
+    if not (n0 <= 2 and n == n0):
+        return [Violation(
+            "single-trace-population", "PopulationSim.run_round",
+            f"sharded cohort program traced {n} times across 4 rounds "
+            f"(want <= 2: init + steady state): a sampled id or shard "
+            f"assignment is leaking into program structure")]
+    return []
+
+
+def check_population_no_host_sync() -> List[Violation]:
+    """Device side of the population round loop, traced under x64: cohort
+    sampling, the sharded cohort program, hierarchical combine, and the
+    store scatter-update contain no f64 and no host callbacks. Straggler
+    calibration (core/straggler.plan_from_store) is deliberately host-side
+    numpy — it runs once per round on O(cohort) scalars OUTSIDE any traced
+    program, and is therefore out of scope here by design."""
+    from repro.core.aggregate import combine_partials
+    from repro.fl.population import (ClientStore, _sample_cohort,
+                                     _update_from_round)
+    from repro.fl.shard_fleet import _sharded_cohort_fn
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.small import SynthMLP
+
+    out = []
+    store = ClientStore.empty(64).register(
+        np.arange(64), np.full(64, 10.0, np.float32),
+        np.zeros(64, np.int32))
+    out += _trace_violations(
+        "population-no-host-sync", "ClientStore.sample_cohort",
+        functools.partial(_sample_cohort, size=8), store,
+        jax.random.PRNGKey(0))
+    ids = jnp.arange(8, dtype=jnp.int32)
+    out += _trace_violations(
+        "population-no-host-sync", "ClientStore.update_from_round",
+        _update_from_round, store, ids,
+        jnp.full((8,), 10.0, jnp.float32), jnp.ones((8,), jnp.float32))
+
+    # sharded cohort program + combine, S=2 shards of 2 clients on 1 device
+    mesh = make_host_mesh(data=1)
+    run = _sharded_cohort_fn(SynthMLP, mesh, 2, False, True)
+    params = SynthMLP.init(jax.random.PRNGKey(0))
+    bank = jax.tree.map(lambda p: p[None].astype(jnp.float32) * 0 + 1,
+                        params)
+    S, Cs, steps, bs = 2, 2, 1, 20
+    xs = jnp.zeros((S, Cs, steps, bs, 32), jnp.float32)
+    ys = jnp.zeros((S, Cs, steps, bs), jnp.int32)
+    sw = jnp.ones((S, Cs, steps, bs), jnp.float32)
+    mi = jnp.zeros((S, Cs), jnp.int32)
+    lrs = jnp.full((S, Cs), 0.05, jnp.float32)
+    w = jnp.full((S, Cs), float(bs), jnp.float32)
+    out += _trace_violations(
+        "population-no-host-sync", "sharded_cohort_program",
+        functools.partial(run, n_steps=steps),
+        params, bank, mi, xs, ys, sw, lrs, w)
+    num = jax.tree.map(jnp.zeros_like, params)
+    out += _trace_violations(
+        "population-no-host-sync", "combine_partials",
+        combine_partials, params, num, jnp.ones((1,), jnp.float32), bank)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # dropped-dW-zero checks (NaN poison)
 
@@ -449,6 +539,8 @@ CHECKS: Dict[str, Callable[[], List[Violation]]] = {
     "single-trace-train": check_train_step_single_trace,
     "single-trace-fleet": check_fleet_single_trace,
     "single-trace-serve": check_serve_single_trace,
+    "single-trace-population": check_population_single_trace,
+    "population-no-host-sync": check_population_no_host_sync,
     "dw-zero-ffn": check_dropped_dw_zero_ffn,
     "dw-zero-attn": check_dropped_dw_zero_attn,
 }

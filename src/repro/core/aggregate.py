@@ -25,6 +25,47 @@ class ClientUpdate:
     client_id: int = -1
 
 
+def partial_sums(stacked_deltas, weights, mask_idx, num_masks: int):
+    """Shard-local half of the masked FedAvg (hierarchical aggregation).
+
+    Reduces one shard's (Cs, ...) stacked deltas to the two sufficient
+    statistics of `aggregate_stacked`:
+
+        num        = sum_c w_c * delta_c            (tree of param-shaped leaves)
+        w_per_mask = sum_{c: idx_c=k} w_c           ((K,) float32)
+
+    Because both are plain sums over clients, per-shard partials add across
+    shards (and `jax.lax.psum` across devices) to exactly the cohort-level
+    statistics — the MaskBank stays replicated, so the denominator
+    `sum_k w_per_mask_k * bank_k` is reconstructed after the reduction by
+    `combine_partials`. num_masks must be the bank's row count K (static).
+    """
+    weights = weights.astype(jnp.float32)
+    w_per_mask = jax.ops.segment_sum(weights, mask_idx,
+                                     num_segments=num_masks)
+    num = jax.tree.map(
+        lambda d: jnp.tensordot(weights, d.astype(jnp.float32), axes=1),
+        stacked_deltas)
+    return num, w_per_mask
+
+
+def combine_partials(global_params, num, w_per_mask, mask_bank):
+    """Apply fully-reduced `partial_sums` statistics to the global params:
+
+        w_new = w + num / (sum_k w_per_mask_k * bank_k)   where den > 0.
+
+    The (num, w_per_mask) pair is linear in the clients, so any reduction
+    tree over shard partials (sequential adds, psum, …) yields the same
+    inputs here up to float summation order.
+    """
+    den = jax.tree.map(lambda b: jnp.tensordot(w_per_mask, b, axes=1),
+                       mask_bank)
+    return jax.tree.map(
+        lambda p, n, d: p + jnp.where(d > 0, n / jnp.maximum(d, 1e-12),
+                                      0.0).astype(p.dtype),
+        global_params, num, den)
+
+
 @jax.jit
 def aggregate_stacked(global_params, stacked_deltas, weights,
                       mask_bank, mask_idx):
@@ -41,19 +82,15 @@ def aggregate_stacked(global_params, stacked_deltas, weights,
     factors through the (few) distinct masks:
         num = sum_c w_c * delta_c
         den = sum_k (sum_{c: idx_c=k} w_c) * bank_k
+
+    Expressed as the one-shard case of the hierarchical pipeline:
+    `partial_sums` over the whole cohort, then `combine_partials` — the
+    sharded executor (fl/shard_fleet.py) runs the same two functions with a
+    psum in between.
     """
-    weights = weights.astype(jnp.float32)
     k = jax.tree.leaves(mask_bank)[0].shape[0]
-    w_per_mask = jax.ops.segment_sum(weights, mask_idx, num_segments=k)
-    num = jax.tree.map(
-        lambda d: jnp.tensordot(weights, d.astype(jnp.float32), axes=1),
-        stacked_deltas)
-    den = jax.tree.map(lambda b: jnp.tensordot(w_per_mask, b, axes=1),
-                       mask_bank)
-    return jax.tree.map(
-        lambda p, n, d: p + jnp.where(d > 0, n / jnp.maximum(d, 1e-12),
-                                      0.0).astype(p.dtype),
-        global_params, num, den)
+    num, w_per_mask = partial_sums(stacked_deltas, weights, mask_idx, k)
+    return combine_partials(global_params, num, w_per_mask, mask_bank)
 
 
 def aggregate(global_params, updates: Sequence[ClientUpdate]):

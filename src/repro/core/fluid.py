@@ -1,12 +1,21 @@
 """FLuID server — Algorithm 1 of the paper, framework-level.
 
-The server is agnostic to how clients execute (real devices, simulated
-clients, or pod-level client shards): anything satisfying the Client
-protocol works. Per calibration step it (1) profiles end-to-end client
-times, (2) re-detects stragglers and T_target, (3) re-derives per-straggler
-dropout rates r_i from the linear time model, (4) increments the drop
-threshold until enough neurons are invariant, and (5) extracts tailored
-sub-models via the selected policy (random / ordered / invariant).
+The server is agnostic to how clients execute: anything satisfying the
+RoundBackend contract (fl/rounds.py: sequential / fleet / sharded_fleet)
+works, and the backend may change per round — the population driver
+(fl/population.py) materializes a fresh cohort backend from the ClientStore
+every round. Per calibration step the server (1) records end-to-end client
+times into the store's speed history, (2) re-detects stragglers and
+T_target from that history, (3) re-derives per-straggler dropout rates r_i
+from the linear time model and writes them back to the store, (4)
+increments the drop threshold until enough neurons are invariant, and (5)
+extracts tailored sub-models via the selected policy (random / ordered /
+invariant).
+
+Layering: core/ never imports fl/. The backend and the store are duck-typed
+— the store needs `rates_of`, `update_from_round`, `assign_rates`, and
+`last_latency` (consumed via core/straggler.plan_from_store); without a
+store the server falls back to per-round dicts (legacy standalone use).
 """
 from __future__ import annotations
 
@@ -14,13 +23,10 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
-import jax
 import numpy as np
 
 from repro.core import invariant as inv
 from repro.core import straggler as strag
-from repro.core import submodel as sub
-from repro.core.aggregate import ClientUpdate, aggregate
 from repro.core.dropout import get_policy, keep_count
 
 
@@ -50,14 +56,16 @@ class RoundLog:
 
 
 class FluidServer:
-    def __init__(self, params, unit_specs, clients, cfg: FluidConfig,
-                 eval_fn: Optional[Callable] = None, engine=None):
+    def __init__(self, params, unit_specs, backend=None, cfg=None,
+                 eval_fn: Optional[Callable] = None, store=None):
+        if cfg is None:
+            raise ValueError("FluidServer needs a FluidConfig (cfg=...)")
         self.params = params
         self.unit_specs = unit_specs
-        self.clients = list(clients)
+        self.backend = backend        # default RoundBackend (fl/rounds.py)
         self.cfg = cfg
         self.eval_fn = eval_fn
-        self.engine = engine          # fl.fleet.FleetEngine or None
+        self.store = store            # fl.population.ClientStore or None
         self.policy = get_policy(
             cfg.method if cfg.method != "none" else "ordered",
             unit_specs, seed=cfg.seed)
@@ -65,6 +73,16 @@ class FluidServer:
         self.plan: Optional[strag.StragglerPlan] = None
         self.round = 0
         self.history: List[RoundLog] = []
+
+    # ------------------------------------------------------------------ views
+    @property
+    def engine(self):
+        """The fleet engine of the default backend, if any (tests, bench)."""
+        return getattr(self.backend, "engine", None)
+
+    @property
+    def clients(self):
+        return self.backend.clients if self.backend is not None else []
 
     # ------------------------------------------------------------------ utils
     def _total_neurons(self) -> int:
@@ -77,49 +95,47 @@ class FluidServer:
         return sum(g["size"] - keep_count(g["size"], r_min)
                    for g in self.unit_specs)
 
+    def _rate_for(self, cid: int) -> float:
+        return (self.cfg.fixed_rate if self.cfg.fixed_rate is not None
+                else self.plan.rates[cid])
+
     # ------------------------------------------------------------------ round
-    def run_round(self, eval_now: bool = False) -> RoundLog:
+    def run_round(self, eval_now: bool = False, backend=None) -> RoundLog:
+        """One synchronous FLuID round via `backend` (default: the one from
+        __init__ — the population driver passes a fresh cohort backend
+        per round). Store slots are client ids."""
         cfg = self.cfg
+        backend = self.backend if backend is None else backend
+        if backend is None:
+            raise ValueError("no RoundBackend: pass backend= to __init__ "
+                             "or run_round")
+        ids = [c.id for c in backend.clients]
         log = RoundLog(round=self.round)
         use_dropout = (cfg.method != "none"
-                       and self.round >= cfg.warmup_rounds
-                       and self.plan is not None
-                       and bool(self.plan.stragglers))
+                       and self.round >= cfg.warmup_rounds)
 
-        # -------- sub-model assignment (shared by both execution backends)
+        # -------- sub-model assignment: the store's per-client dropout rate
+        # (written by the previous calibration) decides who trains what
         keep_maps: Dict[int, dict] = {}
         rates_used: Dict[int, float] = {}
-        if use_dropout:
+        if use_dropout and self.store is not None:
+            for cid, r in zip(ids, self.store.rates_of(ids)):
+                if r < 1.0:
+                    keep_maps[cid] = self.policy.keep_map(float(r))
+                    rates_used[cid] = float(r)
+        elif (use_dropout and self.plan is not None
+              and bool(self.plan.stragglers)):
+            # storeless fallback: read the last plan directly
             for cid in self.plan.stragglers:
-                r = (cfg.fixed_rate if cfg.fixed_rate is not None
-                     else self.plan.rates[cid])
-                keep_maps[cid] = self.policy.keep_map(r)
-                rates_used[cid] = r
+                if cid in ids:
+                    r = self._rate_for(cid)
+                    keep_maps[cid] = self.policy.keep_map(r)
+                    rates_used[cid] = r
 
         # -------- broadcast + local training
         prev = self.params
-        cohort = None
-        updates: List[ClientUpdate] = []
-        if self.engine is not None:
-            # one vmapped program for the whole cohort (fl/fleet.py)
-            cohort = self.engine.run_cohort(self.params, keep_maps,
-                                            rates_used)
-            actual = dict(cohort.sim_times)
-        else:
-            for c in self.clients:
-                if c.id in keep_maps:
-                    keep, r = keep_maps[c.id], rates_used[c.id]
-                    sub_params = sub.extract(self.params, self.unit_specs,
-                                             keep)
-                    u = c.train(sub_params, keep_map=keep, rate=r)
-                    full_delta, mask = sub.embed_delta(
-                        u.delta, self.params, self.unit_specs, keep)
-                    u = ClientUpdate(full_delta, u.n_samples, mask,
-                                     u.sim_time, u.real_time, c.id)
-                else:
-                    u = c.train(self.params)
-                updates.append(u)
-            actual = {u.client_id: u.sim_time for u in updates}
+        result = backend.run_round(self.params, keep_maps, rates_used)
+        actual = dict(result.sim_times)
 
         # full-model-equivalent latency: a straggler that trained a sub-model
         # of size r would take time/r on the full model (linear model, A.3)
@@ -133,29 +149,32 @@ class FluidServer:
             log.stragglers = list(self.plan.stragglers)
             log.rates = dict(self.plan.rates)
 
+        # -------- record observations (speed history feeds recalibration)
+        if self.store is not None:
+            self.store = self.store.update_from_round(
+                np.asarray(ids, np.int32),
+                np.asarray([latencies[c] for c in ids], np.float32),
+                np.asarray([rates_used.get(c, 1.0) for c in ids],
+                           np.float32))
+
         # -------- aggregate
-        if cohort is not None:
-            self.params = cohort.aggregate(self.params)
-        else:
-            self.params = aggregate(self.params, updates)
+        self.params = result.aggregate(self.params)
 
         # -------- calibration (server-side; wall-clock measured as overhead)
         t0 = time.perf_counter()
         if self.round % cfg.calibrate_every == 0:
-            if cohort is not None:
-                per_client = cohort.non_straggler_stats(prev)
-            else:
-                per_client = [
-                    inv.neuron_stats(prev,
-                                     jax.tree.map(lambda p, d: p + d,
-                                                  prev, u.delta),
-                                     self.unit_specs)
-                    for u in updates if u.mask is None]
+            per_client = result.non_straggler_stats(prev)
             if per_client:
                 if self.th is None:
                     self.th = inv.initial_threshold(per_client)
-                self.plan = strag.plan(latencies, frac=cfg.straggler_frac,
-                                       sizes=cfg.submodel_sizes)
+                if self.store is not None:
+                    self.plan = strag.plan_from_store(
+                        self.store, ids, frac=cfg.straggler_frac,
+                        sizes=cfg.submodel_sizes)
+                else:
+                    self.plan = strag.plan(latencies,
+                                           frac=cfg.straggler_frac,
+                                           sizes=cfg.submodel_sizes)
                 target = self._drop_target(
                     {c: cfg.fixed_rate for c in self.plan.stragglers}
                     if cfg.fixed_rate is not None else self.plan.rates)
@@ -166,6 +185,14 @@ class FluidServer:
                 log.threshold = float(self.th)
                 log.invariant_frac = (inv.count_invariant(per_client, self.th)
                                       / self._total_neurons())
+                if self.store is not None:
+                    # write the new plan back: stragglers get their rate,
+                    # everyone else in the cohort returns to the full model
+                    stragglers = set(self.plan.stragglers)
+                    self.store = self.store.assign_rates(
+                        np.asarray(ids, np.int32),
+                        np.asarray([self._rate_for(c) if c in stragglers
+                                    else 1.0 for c in ids], np.float32))
         log.calib_time = time.perf_counter() - t0
 
         if eval_now and self.eval_fn is not None:

@@ -80,7 +80,12 @@ def make_dataset(name: str, n: int = 4000, n_test: int = 800,
     if name == "shakespeare":
         return _char_dataset(n, n_test, n_partitions, seq_len=20, vocab=80,
                              seed=seed + 2)
+    if name == "synth":
+        # flat 32-dim vectors: the population-scale probe workload — same
+        # prototype+style generator, just without image structure
+        return _image_dataset("synth", (32,), 10, n, n_test,
+                              n_partitions, seed + 3)
     raise ValueError(name)
 
 
-DATASETS = ("femnist", "cifar10", "shakespeare")
+DATASETS = ("femnist", "cifar10", "shakespeare", "synth")

@@ -1,4 +1,11 @@
 from repro.fl.client import FleetClient, SimClient
 from repro.fl.fleet import CohortResult, FleetEngine
+from repro.fl.population import (ClientStore, PopulationConfig,
+                                 PopulationSim, build_population,
+                                 population_speeds)
+from repro.fl.rounds import (BACKEND_NAMES, FleetBackend, RoundBackend,
+                             SequentialBackend, ShardedFleetBackend,
+                             make_backend)
+from repro.fl.shard_fleet import ShardedCohortResult, ShardedFleetEngine
 from repro.fl.simulation import (CohortConfig, SimulationConfig,
                                  build_simulation, run_experiment)

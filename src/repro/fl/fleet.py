@@ -268,6 +268,17 @@ class FleetEngine:
         self._bank_cache = (fp, bank, idx, n_by_row)
         return bank, idx, n_by_row
 
+    def _execute(self, params, bank, idx, xs, ys, sw, lrs, weights):
+        """Run the cohort program. Returns (deltas, extra): extra is None
+        here; the sharded subclass (fl/shard_fleet.py) returns the
+        hierarchically-reduced aggregation partials instead of recomputing
+        them from the gathered deltas."""
+        return self._run(params, bank, idx, xs, ys, sw, lrs,
+                         self.steps), None
+
+    def _wrap_result(self, extra, **kw) -> "CohortResult":
+        return CohortResult(**kw)
+
     # ------------------------------------------------------------------- API
     def run_cohort(self, params, keep_maps: Dict[int, dict],
                    rates: Optional[Dict[int, float]] = None,
@@ -292,15 +303,17 @@ class FleetEngine:
                                  f"got {n_steps.shape}")
         xs, ys, sw = self._stacked_data(n_steps)
         bank, idx, n_by_row = self._mask_bank(params, keep_maps)
-        deltas = self._run(params, bank, idx, xs, ys, sw,
-                           jnp.asarray(lrs), self.steps)
+        weights = jnp.asarray([c.n_samples for c in self.clients],
+                              jnp.float32)
+        deltas, extra = self._execute(params, bank, idx, xs, ys, sw,
+                                      jnp.asarray(lrs), weights)
         idx_host = np.asarray(idx)
         sim_times = {
             c.id: c.draw_sim_time(rates.get(c.id, 1.0),
                                   int(n_by_row[idx_host[i]]))
             for i, c in enumerate(self.clients)}
-        weights = jnp.asarray([c.n_samples for c in self.clients],
-                              jnp.float32)
-        return CohortResult(self, deltas, weights, bank, idx,
-                            [c.id for c in self.clients], sim_times,
-                            frozenset(keep_maps))
+        return self._wrap_result(
+            extra, engine=self, deltas=deltas, weights=weights,
+            mask_bank=bank, mask_idx=idx,
+            client_ids=[c.id for c in self.clients], sim_times=sim_times,
+            straggler_ids=frozenset(keep_maps))

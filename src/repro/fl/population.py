@@ -1,0 +1,370 @@
+"""Population layer: a device-resident client registry + the round driver.
+
+FLuID's server decisions (straggler membership, dropout rate, sub-model
+shape) are functions of per-client performance profiles. The paper's
+evaluation holds ~5 real phones; the ROADMAP north-star is a production
+service with 10^5-10^6 registered users of which a few hundred train per
+round. At that scale per-round Python dicts are the wrong data structure —
+the registry must live on device, in struct-of-arrays form, and be cheap to
+sample from and scatter into.
+
+`ClientStore` is that registry: one compact pytree of (N,) / (N, H) arrays
+(speed EMA + ring-buffer history of observed full-model-equivalent
+latencies, straggler-membership EMA, currently assigned dropout rate,
+data-shard id, rounds participated, active flag, and the emulation's
+ground-truth speed). All ops are pure functions returning a new store, so
+they jit, and the store passes through `jax.jit` boundaries as an ordinary
+pytree:
+
+  * `register(slots, speeds, shards)`  — activate clients in bulk;
+  * `sample_cohort(key, size)`         — deterministic seeded sampling
+    without replacement (Gumbel top-k over active clients; fixed output
+    shape, sorted ids) — the same key gives the same cohort on any device
+    count, which the 1-vs-2-device bitwise test relies on;
+  * `update_from_round(ids, lat, rates)` — scatter one round's observed
+    latencies into the EMA/ring history and bump participation;
+  * `assign_rates(ids, rates)`          — write the calibration plan's
+    dropout rates back, so the *next* cohort containing those clients
+    trains the right sub-model;
+  * `set_speed(ids, speeds)`            — emulation ground truth, giving
+    mid-run drift (paper Fig. 4b) a single source of truth.
+
+`PopulationSim` is the round driver over the store: sample a cohort,
+materialize its clients from the data-shard partitions, hand them to a
+`RoundBackend` (fl/rounds.py: sequential / fleet / sharded_fleet), and let
+`core/fluid.FluidServer` run the FLuID round against the store. Straggler
+detection (core/straggler.plan_from_store) reads the store's speed history
+instead of per-round dicts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.fluid import FluidConfig, FluidServer
+
+_EMA = 0.25                      # weight of the newest observation
+DEFAULT_HISTORY = 4              # latency ring-buffer depth per client
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class ClientStore:
+    """Struct-of-arrays registry for the whole client population.
+
+    All fields are arrays with leading dim N (the registry capacity); the
+    store itself is a pytree, so it moves through jit/shard boundaries
+    whole. Slots are client ids: slot i holds client i.
+    """
+    speed: jnp.ndarray                # (N,) f32 ground-truth s/epoch (emulation)
+    speed_ema: jnp.ndarray            # (N,) f32 EMA of observed latencies
+    speed_hist: jnp.ndarray           # (N, H) f32 latency ring buffer (NaN=empty)
+    straggler_ema: jnp.ndarray        # (N,) f32 EMA of straggler membership
+    dropout_rate: jnp.ndarray         # (N,) f32 assigned sub-model size (1=full)
+    data_shard: jnp.ndarray           # (N,) i32 dataset partition id
+    rounds_participated: jnp.ndarray  # (N,) i32
+    active: jnp.ndarray               # (N,) bool registered & eligible
+
+    # ------------------------------------------------------------ pytree
+    _FIELDS = ("speed", "speed_ema", "speed_hist", "straggler_ema",
+               "dropout_rate", "data_shard", "rounds_participated", "active")
+
+    def tree_flatten(self):
+        return tuple(getattr(self, f) for f in self._FIELDS), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # ------------------------------------------------------------- shape
+    @property
+    def capacity(self) -> int:
+        return self.active.shape[0]
+
+    @property
+    def history(self) -> int:
+        return self.speed_hist.shape[1]
+
+    @property
+    def n_active(self) -> int:
+        return int(jnp.sum(self.active))
+
+    # ------------------------------------------------------ construction
+    @classmethod
+    def empty(cls, capacity: int, history: int = DEFAULT_HISTORY):
+        return cls(
+            speed=jnp.zeros((capacity,), jnp.float32),
+            speed_ema=jnp.zeros((capacity,), jnp.float32),
+            speed_hist=jnp.full((capacity, history), jnp.nan, jnp.float32),
+            straggler_ema=jnp.zeros((capacity,), jnp.float32),
+            dropout_rate=jnp.ones((capacity,), jnp.float32),
+            data_shard=jnp.zeros((capacity,), jnp.int32),
+            rounds_participated=jnp.zeros((capacity,), jnp.int32),
+            active=jnp.zeros((capacity,), bool),
+        )
+
+    def register(self, slots, speeds, data_shards) -> "ClientStore":
+        """Activate `slots` with emulation speeds + data-shard assignment."""
+        idx = jnp.asarray(slots, jnp.int32)
+        return dataclasses.replace(
+            self,
+            speed=self.speed.at[idx].set(jnp.asarray(speeds, jnp.float32)),
+            data_shard=self.data_shard.at[idx].set(
+                jnp.asarray(data_shards, jnp.int32)),
+            active=self.active.at[idx].set(True),
+        )
+
+    # --------------------------------------------------------------- ops
+    def sample_cohort(self, key, size: int) -> jnp.ndarray:
+        """Seeded without-replacement sample of `size` active clients.
+
+        Gumbel top-k: score active clients by iid Gumbel noise and take the
+        k best — a fixed-shape program whose result depends only on (store,
+        key), never on device layout. Ids come back sorted so downstream
+        host loops are order-stable."""
+        return _sample_cohort(self, key, size)
+
+    def update_from_round(self, ids, latencies, rates) -> "ClientStore":
+        """Record one round's observations for the cohort `ids`.
+
+        latencies: full-model-equivalent seconds (a rate-r straggler's
+        t/r — core/fluid.py computes this); rates: the sub-model size each
+        client actually trained (1.0 = full). The first observation seeds
+        the EMAs directly."""
+        return _update_from_round(self, jnp.asarray(ids, jnp.int32),
+                                  jnp.asarray(latencies, jnp.float32),
+                                  jnp.asarray(rates, jnp.float32))
+
+    def assign_rates(self, ids, rates) -> "ClientStore":
+        """Write calibration output: dropout rate each client trains next."""
+        return dataclasses.replace(
+            self, dropout_rate=self.dropout_rate.at[
+                jnp.asarray(ids, jnp.int32)].set(
+                jnp.asarray(rates, jnp.float32)))
+
+    def set_speed(self, ids, speeds) -> "ClientStore":
+        """Mutate emulation ground truth (mid-run drift, paper Fig. 4b)."""
+        return dataclasses.replace(
+            self, speed=self.speed.at[jnp.asarray(ids, jnp.int32)].set(
+                jnp.asarray(speeds, jnp.float32)))
+
+    # ------------------------------------------------------ host-side views
+    def rates_of(self, ids) -> np.ndarray:
+        return np.asarray(self.dropout_rate)[np.asarray(ids, np.int64)]
+
+    def speeds_of(self, ids) -> np.ndarray:
+        return np.asarray(self.speed)[np.asarray(ids, np.int64)]
+
+    def shards_of(self, ids) -> np.ndarray:
+        return np.asarray(self.data_shard)[np.asarray(ids, np.int64)]
+
+    def last_latency(self, ids) -> np.ndarray:
+        """Most recent observed latency per client; NaN if never observed.
+        This is what core/straggler.plan_from_store calibrates from."""
+        idx = np.asarray(ids, np.int64)
+        rp = np.asarray(self.rounds_participated)[idx]
+        hist = np.asarray(self.speed_hist)[idx]
+        pos = (rp - 1) % self.history
+        out = hist[np.arange(idx.size), pos].astype(np.float64)
+        out[rp == 0] = np.nan
+        return out
+
+
+@functools.partial(jax.jit, static_argnames=("size",))
+def _sample_cohort(store: ClientStore, key, size: int) -> jnp.ndarray:
+    g = jax.random.gumbel(key, (store.capacity,), jnp.float32)
+    score = jnp.where(store.active, g, -jnp.inf)
+    _, ids = jax.lax.top_k(score, size)
+    return jnp.sort(ids).astype(jnp.int32)
+
+
+@jax.jit
+def _update_from_round(store: ClientStore, ids, lat, rates) -> ClientStore:
+    pos = store.rounds_participated[ids] % store.history
+    first = store.rounds_participated[ids] == 0
+    was_straggler = (rates < 1.0).astype(jnp.float32)
+    ema = jnp.where(first, lat,
+                    (1.0 - _EMA) * store.speed_ema[ids] + _EMA * lat)
+    sema = jnp.where(first, was_straggler,
+                     (1.0 - _EMA) * store.straggler_ema[ids]
+                     + _EMA * was_straggler)
+    return dataclasses.replace(
+        store,
+        speed_hist=store.speed_hist.at[ids, pos].set(lat),
+        speed_ema=store.speed_ema.at[ids].set(ema),
+        straggler_ema=store.straggler_ema.at[ids].set(sema),
+        rounds_participated=store.rounds_participated.at[ids].add(1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Population speed model (vectorized form of simulation.default_speeds)
+
+def population_speeds(n: int, straggler_frac: float = 0.1,
+                      base: float = 10.0, slow_factor: float = 1.3,
+                      seed: int = 0) -> np.ndarray:
+    """Per-epoch seconds for a whole population: a clustered fast majority
+    plus a `straggler_frac` slow minority at slow_factor x base (paper
+    Fig. 4a's 10-32% slower phones). Noise is clipped so the fast cluster
+    never overlaps the slow band — gap detection stays well-posed in any
+    sampled cohort."""
+    rng = np.random.RandomState(seed)
+    speeds = base * (1.0 + 0.05 * np.clip(rng.randn(n), -2.5, 2.5))
+    slow = rng.rand(n) < straggler_frac
+    speeds[slow] = base * slow_factor
+    return speeds.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Round driver: store -> cohort -> backend -> FluidServer -> store
+
+@dataclass
+class PopulationConfig:
+    """A population-scale experiment: registry size, per-round cohort, and
+    which RoundBackend executes the cohort."""
+    n_clients: int = 100_000
+    cohort_size: int = 100
+    workload: str = "synth"
+    backend: str = "fleet"            # fl.rounds.BACKEND_NAMES
+    policy: str = "invariant"
+    n_shards: Optional[int] = None    # sharded_fleet: logical shards (None
+                                      # => one per mesh device)
+    n_partitions: int = 64            # dataset shards clients map onto
+    samples_per_partition: int = 100
+    straggler_frac_pop: float = 0.1   # fraction of the population that is slow
+    slow_factor: float = 1.3
+    base_speed: float = 10.0
+    local_epochs: int = 1
+    fixed_rate: Optional[float] = None
+    straggler_frac: Optional[float] = None   # detection override (None=gap)
+    use_kernels: bool = False
+    history: int = DEFAULT_HISTORY
+    seed: int = 0
+
+
+class PopulationSim:
+    """Drives FLuID rounds against a ClientStore.
+
+    Each round: fold the round index into the base key, sample a cohort
+    from the store, materialize FleetClients over the cohort's data shards
+    (with the store's current ground-truth speeds, so drift applied via
+    `set_speed` is visible to the *next* sample), build the configured
+    RoundBackend, and run one FluidServer round — which records latencies
+    back into the store and re-plans dropout rates from its history.
+    """
+
+    def __init__(self, cfg: PopulationConfig, store: ClientStore,
+                 server: FluidServer, model_cls, ds, partitions,
+                 lr: float, batch_size: int, mesh=None):
+        self.cfg = cfg
+        self.server = server
+        self.model_cls = model_cls
+        self.ds = ds
+        self._parts = partitions          # list of index arrays into ds
+        self.lr = lr
+        self.batch_size = batch_size
+        self.mesh = mesh
+        self._key = jax.random.PRNGKey(cfg.seed)
+        self._store_ref = store           # server owns the live store
+
+    # ------------------------------------------------------------- state
+    @property
+    def store(self) -> ClientStore:
+        return self.server.store
+
+    def set_speed(self, client_id: int, speed: float):
+        """Drift emulation: visible to the next cohort sample + round."""
+        self.server.store = self.server.store.set_speed([client_id], [speed])
+
+    # ------------------------------------------------------------- round
+    def cohort_ids(self, rnd: Optional[int] = None) -> np.ndarray:
+        rnd = self.server.round if rnd is None else rnd
+        key = jax.random.fold_in(self._key, rnd)
+        return np.asarray(self.store.sample_cohort(key, self.cfg.cohort_size))
+
+    def _materialize(self, ids: np.ndarray) -> List:
+        from repro.fl.client import FleetClient
+        speeds = self.store.speeds_of(ids)
+        shards = self.store.shards_of(ids)
+        seed = self.cfg.seed + 65537 * self.server.round
+        return [FleetClient(int(cid), self.model_cls,
+                            self.ds.x[self._parts[s]],
+                            self.ds.y[self._parts[s]],
+                            speed=float(sp), batch_size=self.batch_size,
+                            lr=self.lr, local_epochs=self.cfg.local_epochs,
+                            seed=seed)
+                for cid, sp, s in zip(ids, speeds, shards)]
+
+    def run_round(self, eval_now: bool = False):
+        from repro.fl.rounds import make_backend
+        ids = self.cohort_ids()
+        clients = self._materialize(ids)
+        backend = make_backend(self.cfg.backend, self.model_cls, clients,
+                               self.model_cls.UNIT_SPECS,
+                               use_kernels=self.cfg.use_kernels,
+                               mesh=self.mesh, n_shards=self.cfg.n_shards)
+        return self.server.run_round(eval_now=eval_now, backend=backend)
+
+    def run(self, rounds: int, eval_every: int = 0):
+        for i in range(rounds):
+            ev = bool(eval_every) and ((i + 1) % eval_every == 0
+                                       or i == rounds - 1)
+            self.run_round(eval_now=ev)
+        return self.server.history
+
+
+def build_population(cfg: PopulationConfig, mesh=None) -> PopulationSim:
+    """Assemble store + dataset + FluidServer for a population run.
+
+    Data: `n_partitions` IID partitions of a `workload` dataset; every
+    client maps onto one partition (many-to-one), so 10^5 clients share
+    O(n_partitions) resident arrays and any cohort has identical shard
+    shapes — the property that keeps the cohort program single-trace
+    across rounds."""
+    # late import: simulation imports this module for the ClientStore
+    from repro.data.partition import partition_iid
+    from repro.data.synthetic import make_dataset
+    from repro.fl.rounds import BACKEND_NAMES
+    from repro.fl.simulation import WORKLOADS
+    from repro.models.kernel_models import KERNEL_MODELS
+    from repro.models.small import MODELS
+
+    if cfg.backend not in BACKEND_NAMES:
+        raise ValueError(f"backend must be one of {BACKEND_NAMES}, "
+                         f"got {cfg.backend!r}")
+    ds_name, model_name, lr, bs = WORKLOADS[cfg.workload]
+    model_cls = (MODELS[model_name] if model_name in MODELS
+                 else KERNEL_MODELS[model_name])
+    n_data = cfg.n_partitions * cfg.samples_per_partition
+    ds = make_dataset(ds_name, n=n_data, n_test=max(400, n_data // 5),
+                      n_partitions=cfg.n_partitions, seed=cfg.seed)
+    parts = partition_iid(ds, cfg.n_partitions, seed=cfg.seed)
+
+    rng_speeds = population_speeds(cfg.n_clients, cfg.straggler_frac_pop,
+                                   base=cfg.base_speed,
+                                   slow_factor=cfg.slow_factor,
+                                   seed=cfg.seed)
+    shard_rng = np.random.RandomState(cfg.seed + 1)
+    shards = shard_rng.randint(0, cfg.n_partitions, size=cfg.n_clients)
+    store = ClientStore.empty(cfg.n_clients, history=cfg.history).register(
+        np.arange(cfg.n_clients), rng_speeds, shards)
+
+    params = model_cls.init(jax.random.PRNGKey(cfg.seed))
+    xt, yt = jnp.asarray(ds.x_test), jnp.asarray(ds.y_test)
+
+    def eval_fn(p):
+        logits = model_cls.apply(p, xt)
+        return float((jnp.argmax(logits, -1) == yt).mean())
+
+    fcfg = FluidConfig(method=cfg.policy, fixed_rate=cfg.fixed_rate,
+                       straggler_frac=cfg.straggler_frac, seed=cfg.seed)
+    server = FluidServer(params, model_cls.UNIT_SPECS, cfg=fcfg,
+                         eval_fn=eval_fn, store=store)
+    return PopulationSim(cfg, store, server, model_cls, ds, parts,
+                         lr=lr, batch_size=bs, mesh=mesh)

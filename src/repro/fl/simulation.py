@@ -1,18 +1,22 @@
-"""End-to-end FL simulation assembly: data -> clients -> FluidServer.
+"""End-to-end FL simulation assembly: data -> ClientStore -> FluidServer.
 
 Experiments are described by a typed `SimulationConfig` (workload, backend,
-policy, cohort composition, speed model) instead of a loose kwargs bag, so
-configs can be constructed programmatically, validated up front, and carry
-per-client heterogeneity (learning rates, local-epoch counts) that the
-fleet backend executes as vmapped data. `build_simulation` still accepts
-the legacy positional-workload call shape as a DeprecationWarning shim;
-`run_experiment` is the one-call driver used by benchmarks and examples.
+policy, cohort composition, speed model) so configs can be constructed
+programmatically, validated up front, and carry per-client heterogeneity
+(learning rates, local-epoch counts) that the fleet backends execute as
+vmapped data. The legacy ``build_simulation(workload, **kwargs)`` call
+shape (deprecated in PR 2) has been removed — `build_simulation` takes a
+SimulationConfig, full stop.
+
+Every simulation owns a ClientStore (fl/population.py) with one slot per
+client: speeds live there (set_speed writes through), round latencies are
+recorded there, and straggler recalibration reads the store's speed
+history — the same data path the population-scale driver uses, just with a
+cohort that happens to equal the whole registry.
 """
 from __future__ import annotations
 
-import warnings
-
-from dataclasses import dataclass, field, fields
+from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Union
 
 import jax
@@ -24,11 +28,12 @@ from repro.core.fluid import FluidConfig, FluidServer
 from repro.data.partition import partition_non_iid
 from repro.data.synthetic import make_dataset
 from repro.fl.client import FleetClient, SimClient
-from repro.fl.fleet import FleetEngine
+from repro.fl.population import ClientStore
+from repro.fl.rounds import BACKEND_NAMES, make_backend
 from repro.models.kernel_models import KERNEL_MODELS
 from repro.models.small import MODELS
 
-BACKENDS = ("sequential", "fleet")
+BACKENDS = BACKEND_NAMES               # ("sequential", "fleet", "sharded_fleet")
 
 WORKLOADS = {
     "femnist": ("femnist", "femnist_cnn", 0.004, 10),
@@ -38,6 +43,10 @@ WORKLOADS = {
     # can route through the Pallas kernels (use_kernels=True, fleet only)
     "femnist_kernel": ("femnist", "kernel_mlp", 0.02, 10),
     "femnist_attn": ("femnist", "kernel_attn", 0.02, 10),
+    # population-scale workload: 32-dim vector MLP, small enough that a
+    # 5k-client cohort's stacked batches stay ~64 MB (benchmarks/
+    # population_bench.py)
+    "synth": ("synth", "synth_mlp", 0.05, 20),
 }
 
 
@@ -86,6 +95,7 @@ class SimulationConfig:
     fixed_rate: Optional[float] = None
     straggler_frac: Optional[float] = None
     use_kernels: bool = False     # fleet backend: route masked matmuls
+    n_shards: Optional[int] = None  # sharded_fleet: logical shard count
     seed: int = 0                 # through the Pallas kernel path (§10)
 
     def __post_init__(self):
@@ -101,6 +111,9 @@ class SimulationConfig:
         if self.policy != "none" and self.policy not in available_policies():
             raise ValueError(f"unknown dropout policy {self.policy!r}; "
                              f"available: {available_policies()} or 'none'")
+        if self.n_shards is not None and self.backend != "sharded_fleet":
+            raise ValueError("n_shards only applies to backend="
+                             "'sharded_fleet'")
 
 
 @dataclass
@@ -111,11 +124,21 @@ class Simulation:
     ds: object
     backend: str = "sequential"
 
+    @property
+    def store(self) -> ClientStore:
+        """The simulation's ClientStore (slot i == client i)."""
+        return self.server.store
+
     def set_speed(self, client_id: int, speed: float):
-        """Emulate runtime condition changes (paper Fig. 4b)."""
+        """Emulate runtime condition changes (paper Fig. 4b). Writes through
+        to the ClientStore, so recalibration and any later cohort sampling
+        see the drift immediately — the client object and the store cannot
+        go stale relative to each other."""
         for c in self.clients:
             if c.id == client_id:
                 c.speed = speed
+                self.server.store = self.server.store.set_speed(
+                    [client_id], [speed])
                 return
         raise KeyError(client_id)
 
@@ -124,9 +147,12 @@ def default_speeds(n_clients: int, straggler_ids: Sequence[int],
                    base: float = 10.0, slow_factor: float = 1.3,
                    seed: int = 0) -> Dict[int, float]:
     """Per-epoch seconds mirroring the paper's phone fleet: clustered
-    non-stragglers + slow_factor x stragglers (10-32% slower, Fig. 4a)."""
+    non-stragglers + slow_factor x stragglers (10-32% slower, Fig. 4a).
+    One vectorized draw — the same RandomState stream as the historical
+    per-client loop, so seeds reproduce old runs."""
     rng = np.random.RandomState(seed)
-    speeds = {i: base * (1.0 + 0.05 * rng.randn()) for i in range(n_clients)}
+    vals = base * (1.0 + 0.05 * rng.randn(n_clients))
+    speeds = {i: float(vals[i]) for i in range(n_clients)}
     for s in straggler_ids:
         speeds[s] = base * slow_factor
     return speeds
@@ -146,7 +172,7 @@ def _build(cfg: SimulationConfig) -> Simulation:
                                 slow_factor=co.slow_factor, seed=cfg.seed)
     lrs = co.client_lrs(lr)
     epochs = co.client_epochs()
-    client_cls = FleetClient if cfg.backend == "fleet" else SimClient
+    client_cls = SimClient if cfg.backend == "sequential" else FleetClient
     clients = [client_cls(i, model_cls, ds.x[parts[i]], ds.y[parts[i]],
                           speed=speeds[i], batch_size=bs, lr=lrs[i],
                           local_epochs=epochs[i], seed=cfg.seed)
@@ -159,56 +185,41 @@ def _build(cfg: SimulationConfig) -> Simulation:
         logits = model_cls.apply(p, xt)
         return float((jnp.argmax(logits, -1) == yt).mean())
 
+    # one store slot per client: speeds + latency history + assigned rates
+    store = ClientStore.empty(co.n_clients).register(
+        np.arange(co.n_clients),
+        np.asarray([speeds[i] for i in range(co.n_clients)], np.float32),
+        np.arange(co.n_clients))
+
     fcfg = FluidConfig(method=cfg.policy, fixed_rate=cfg.fixed_rate,
                        straggler_frac=cfg.straggler_frac, seed=cfg.seed)
-    engine = (FleetEngine(model_cls, clients, model_cls.UNIT_SPECS,
-                          use_kernels=cfg.use_kernels)
-              if cfg.backend == "fleet" else None)
-    server = FluidServer(params, model_cls.UNIT_SPECS, clients, fcfg,
-                         eval_fn=eval_fn, engine=engine)
+    backend = make_backend(cfg.backend, model_cls, clients,
+                           model_cls.UNIT_SPECS, use_kernels=cfg.use_kernels,
+                           n_shards=cfg.n_shards)
+    server = FluidServer(params, model_cls.UNIT_SPECS, backend, fcfg,
+                         eval_fn=eval_fn, store=store)
     return Simulation(server, clients, model_cls, ds, cfg.backend)
 
 
-_COHORT_KEYS = {f.name for f in fields(CohortConfig)}
-_TOP_KEYS = {f.name for f in fields(SimulationConfig)} - {"workload", "cohort"}
+def build_simulation(config: SimulationConfig) -> Simulation:
+    """Build from a SimulationConfig. The legacy
+    ``build_simulation("femnist", n_clients=..., method=...)`` kwargs shape
+    was removed after its PR-2 deprecation cycle — construct a
+    SimulationConfig (cohort fields go in CohortConfig)."""
+    if not isinstance(config, SimulationConfig):
+        raise TypeError(
+            f"build_simulation takes a SimulationConfig, got "
+            f"{type(config).__name__}; the legacy workload-name + kwargs "
+            f"form was removed — use build_simulation(SimulationConfig("
+            f"workload=..., cohort=CohortConfig(...)))")
+    return _build(config)
 
 
-def build_simulation(config=None, **kw) -> Simulation:
-    """Build from a SimulationConfig (canonical) or from the legacy
-    `build_simulation("femnist", n_clients=..., method=...)` shape
-    (positional or `workload=` keyword), which still works but emits a
-    DeprecationWarning."""
-    if config is None:
-        config = kw.pop("workload")
-    if isinstance(config, SimulationConfig):
-        if kw:
-            raise TypeError("pass overrides inside SimulationConfig, not as "
-                            f"kwargs: {sorted(kw)}")
-        return _build(config)
-    if not isinstance(config, str):
-        raise TypeError(f"expected SimulationConfig or workload name, "
-                        f"got {type(config).__name__}")
-    warnings.warn(
-        "build_simulation(workload, **kwargs) is deprecated; construct a "
-        "repro.fl.SimulationConfig and pass it instead",
-        DeprecationWarning, stacklevel=2)
-    if "method" in kw:                    # legacy name for `policy`
-        kw["policy"] = kw.pop("method")
-    cohort = CohortConfig(**{k: kw.pop(k) for k in list(kw)
-                             if k in _COHORT_KEYS})
-    unknown = set(kw) - _TOP_KEYS
-    if unknown:
-        raise TypeError(f"unknown build_simulation kwargs: {sorted(unknown)}")
-    return _build(SimulationConfig(workload=config, cohort=cohort, **kw))
-
-
-def run_experiment(workload, rounds: int, **kw):
-    """Driver: build + run. `workload` is a SimulationConfig or a legacy
-    workload name (routed through the build_simulation shim)."""
-    eval_every = kw.pop("eval_every", max(1, rounds // 5))
-    if isinstance(workload, SimulationConfig) and kw:
-        raise TypeError("pass overrides inside SimulationConfig, not as "
-                        f"kwargs: {sorted(kw)}")
-    sim = build_simulation(workload, **kw)
+def run_experiment(config: SimulationConfig, rounds: int,
+                   eval_every: Optional[int] = None):
+    """Driver: build + run a SimulationConfig for `rounds` rounds."""
+    if eval_every is None:
+        eval_every = max(1, rounds // 5)
+    sim = build_simulation(config)
     hist = sim.server.run(rounds, eval_every=eval_every)
     return sim, hist

@@ -198,5 +198,37 @@ class ShakespeareLSTM:
         return h[:, -1] @ params["out"]["w"] + params["out"]["b"]
 
 
+# ---------------------------------------------------------------------------
+# Population-scale probe model: 32-dim vector in, one droppable hidden layer.
+# Small on purpose — a 5k-client cohort's stacked deltas stay a few hundred
+# MB short of anything interesting, so benchmarks/population_bench.py can
+# sweep cohort sizes from a 100k-client store on one host.
+
+class SynthMLP:
+    num_classes = 10
+    input_shape = (32,)
+
+    UNIT_SPECS = [
+        {"name": "fc1", "size": 64,
+         "out": [("fc1/w", 1, 1), ("fc1/b", 0, 1)],
+         "in": [("out/w", 0, 1)]},
+    ]
+
+    @staticmethod
+    def init(key):
+        ks = jax.random.split(key, 2)
+        return {
+            "fc1": {"w": _dense(ks[0], 32, (32, 64)),
+                    "b": jnp.zeros((64,), jnp.float32)},
+            "out": {"w": _dense(ks[1], 64, (64, 10)),
+                    "b": jnp.zeros((10,), jnp.float32)},
+        }
+
+    @staticmethod
+    def apply(params, x):
+        h = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+        return h @ params["out"]["w"] + params["out"]["b"]
+
+
 MODELS = {"femnist_cnn": FemnistCNN, "cifar_vgg9": Vgg9,
-          "shakespeare_lstm": ShakespeareLSTM}
+          "shakespeare_lstm": ShakespeareLSTM, "synth_mlp": SynthMLP}

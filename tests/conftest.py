@@ -1,6 +1,13 @@
 import os
+import re
 
-# Tests must see the real device count (1 CPU); the 512-device flag is set
-# ONLY by the dry-run launcher. Guard against accidental inheritance.
-assert "xla_force_host_platform_device_count" not in os.environ.get(
-    "XLA_FLAGS", ""), "run pytest without the dry-run XLA_FLAGS"
+# Tests must not inherit the dry-run launcher's 512-virtual-device flag —
+# they would silently benchmark the wrong topology. Small forced counts
+# (<= 8) are legitimate: the population-smoke CI job runs the suite under
+# --xla_force_host_platform_device_count=2 so the shard_map tests exercise
+# a real multi-device mesh on the 1-CPU container.
+_m = re.search(r"xla_force_host_platform_device_count=(\d+)",
+               os.environ.get("XLA_FLAGS", ""))
+assert _m is None or int(_m.group(1)) <= 8, (
+    "run pytest without the dry-run XLA_FLAGS (forced device counts > 8 "
+    "are reserved for the launch dry-run)")

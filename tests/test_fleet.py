@@ -16,7 +16,8 @@ from repro.core.aggregate import ClientUpdate, aggregate, aggregate_stacked
 from repro.core.dropout import DropoutPolicy
 from repro.fl.client import FleetClient, SimClient
 from repro.fl.fleet import FleetEngine
-from repro.fl.simulation import build_simulation
+from repro.fl.simulation import (CohortConfig, SimulationConfig,
+                                 build_simulation)
 
 
 def _tree_close(a, b, atol, rtol=1e-5):
@@ -24,11 +25,15 @@ def _tree_close(a, b, atol, rtol=1e-5):
         np.asarray(x), np.asarray(y), atol=atol, rtol=rtol), a, b)
 
 
+def _cfg(backend):
+    return SimulationConfig(
+        workload="femnist", backend=backend, policy="invariant", seed=0,
+        cohort=CohortConfig(n_clients=4, straggler_ids=(0,), n_data=240))
+
+
 @pytest.fixture(scope="module")
 def fleet_sim():
-    return build_simulation("femnist", n_clients=4, straggler_ids=(0,),
-                            method="invariant", n_data=240, seed=0,
-                            backend="fleet")
+    return build_simulation(_cfg("fleet"))
 
 
 def _clone_seq_client(c, model_cls):
@@ -146,10 +151,8 @@ def test_keep_mask_matches_embed_delta_mask(fleet_sim):
 
 
 def test_end_to_end_fleet_matches_sequential_rounds(fleet_sim):
-    kw = dict(workload="femnist", n_clients=4, straggler_ids=(0,),
-              method="invariant", n_data=240, seed=0)
-    seq = build_simulation(backend="sequential", **kw)
-    flt = build_simulation(backend="fleet", **kw)
+    seq = build_simulation(_cfg("sequential"))
+    flt = build_simulation(_cfg("fleet"))
     hs = seq.server.run(3)
     hf = flt.server.run(3)
     for a, b in zip(hs, hf):

@@ -2,15 +2,22 @@
 import numpy as np
 import pytest
 
-from repro.fl.simulation import build_simulation
+from repro.fl.simulation import (CohortConfig, SimulationConfig,
+                                 build_simulation)
 
 pytestmark = pytest.mark.slow    # multi-minute: tier-1 only, not the CI fast tier
 
 
+def _cfg(method="invariant", n_clients=5, seed=0):
+    return SimulationConfig(
+        workload="femnist", policy=method, seed=seed,
+        cohort=CohortConfig(n_clients=n_clients, straggler_ids=(0,),
+                            n_data=400))
+
+
 @pytest.fixture(scope="module")
 def sim_hist():
-    sim = build_simulation("femnist", n_clients=5, straggler_ids=(0,),
-                           method="invariant", n_data=400, seed=0)
+    sim = build_simulation(_cfg())
     hist = sim.server.run(6, eval_every=6)
     return sim, hist
 
@@ -34,8 +41,7 @@ def test_straggler_time_near_target(sim_hist):
 def test_round_time_improves_vs_no_dropout():
     times = {}
     for method in ("none", "invariant"):
-        sim = build_simulation("femnist", n_clients=5, straggler_ids=(0,),
-                               method=method, n_data=400, seed=0)
+        sim = build_simulation(_cfg(method=method))
         hist = sim.server.run(5)
         times[method] = np.mean([h.round_time for h in hist[2:]])
     assert times["invariant"] < times["none"]
@@ -49,8 +55,7 @@ def test_invariant_fraction_grows(sim_hist):
 
 def test_dynamic_straggler_recalibration():
     """Paper Fig 4b: when the slow device changes, FLuID re-targets."""
-    sim = build_simulation("femnist", n_clients=4, straggler_ids=(0,),
-                           method="invariant", n_data=400, seed=1)
+    sim = build_simulation(_cfg(n_clients=4, seed=1))
     sim.server.run(3)
     assert sim.server.plan.stragglers == [0]
     sim.set_speed(0, 10.0)      # straggler recovers

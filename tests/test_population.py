@@ -1,0 +1,283 @@
+"""Population layer: ClientStore ops, sharded cohort execution, round
+pipeline equivalence (fl/population.py, fl/rounds.py, fl/shard_fleet.py).
+
+The acceptance contracts:
+  * all three RoundBackends produce the same round decisions and agree on
+    aggregated params up to float summation order, for cohorts sampled
+    from a 10^4-client store;
+  * with >= 2 host devices, the sharded_fleet run on a 2-device mesh is
+    BITWISE identical to the same run on a 1-device mesh — cohort samples
+    and aggregated params (the S-shard program is the numerical contract,
+    the device count is not);
+  * straggler recalibration reads the store's history
+    (core/straggler.plan_from_store) and reacts to drift within one
+    calibration interval.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import straggler as sg
+from repro.fl.population import (ClientStore, PopulationConfig,
+                                 build_population, population_speeds)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _pop_cfg(**over):
+    kw = dict(n_clients=10_000, cohort_size=8, workload="synth",
+              backend="fleet", n_partitions=16, samples_per_partition=40,
+              seed=42)
+    kw.update(over)
+    return PopulationConfig(**kw)
+
+
+def _leaves_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y), equal_nan=True)
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _tree_close(a, b, atol):
+    jax.tree.map(lambda x, y: np.testing.assert_allclose(
+        np.asarray(x), np.asarray(y), atol=atol, rtol=1e-5), a, b)
+
+
+# ---------------------------------------------------------------------------
+# ClientStore unit behaviour
+
+
+def test_store_register_and_views():
+    st = ClientStore.empty(100).register([3, 7], [10.0, 13.0], [1, 2])
+    assert st.capacity == 100 and st.n_active == 2
+    assert st.speeds_of([3, 7]).tolist() == [10.0, 13.0]
+    assert st.shards_of([7]).tolist() == [2]
+    assert st.rates_of([3]).tolist() == [1.0]     # full model by default
+
+
+def test_store_sample_cohort_deterministic_and_active_only():
+    st = ClientStore.empty(50).register(np.arange(0, 50, 2),
+                                        np.full(25, 10.0), np.zeros(25))
+    key = jax.random.PRNGKey(0)
+    ids = np.asarray(st.sample_cohort(key, 10))
+    again = np.asarray(st.sample_cohort(key, 10))
+    np.testing.assert_array_equal(ids, again)          # same key, same cohort
+    assert np.all(ids % 2 == 0)                        # only active slots
+    assert np.all(np.diff(ids) > 0)                    # sorted, no repeats
+    other = np.asarray(st.sample_cohort(jax.random.PRNGKey(1), 10))
+    assert not np.array_equal(ids, other)              # keys decorrelate
+
+
+def test_store_update_from_round_ring_and_ema():
+    st = ClientStore.empty(10, history=3).register([0, 1], [10.0, 13.0],
+                                                   [0, 0])
+    st = st.update_from_round([0, 1], [10.0, 13.0], [1.0, 0.75])
+    # first observation seeds the EMAs directly
+    assert float(st.speed_ema[0]) == 10.0
+    assert float(st.straggler_ema[1]) == 1.0           # trained a sub-model
+    assert float(st.straggler_ema[0]) == 0.0
+    np.testing.assert_allclose(st.last_latency([0, 1]), [10.0, 13.0])
+    assert np.isnan(st.last_latency([5])[0])           # never observed
+    # ring buffer wraps at `history` without losing the newest value
+    for t in (11.0, 12.0, 14.0):
+        st = st.update_from_round([0], [t], [1.0])
+    assert int(st.rounds_participated[0]) == 4
+    assert float(st.last_latency([0])[0]) == 14.0
+    assert np.isfinite(np.asarray(st.speed_hist)[0]).all()
+
+
+def test_store_assign_rates_and_set_speed():
+    st = ClientStore.empty(8).register(np.arange(8), np.full(8, 10.0),
+                                       np.zeros(8))
+    st = st.assign_rates([2, 5], [0.75, 0.85])
+    np.testing.assert_allclose(st.rates_of([2, 5, 0]), [0.75, 0.85, 1.0])
+    st = st.set_speed([2], [13.0])
+    assert float(st.speeds_of([2])[0]) == 13.0
+
+
+def test_store_is_a_pytree():
+    st = ClientStore.empty(4).register([0, 1], [1.0, 2.0], [0, 1])
+    leaves, treedef = jax.tree.flatten(st)
+    st2 = jax.tree.unflatten(treedef, leaves)
+    assert _leaves_equal(st, st2)
+    doubled = jax.jit(lambda s: s.assign_rates([0], [0.5]))(st)
+    assert float(doubled.dropout_rate[0]) == 0.5
+
+
+def test_population_speeds_shape_and_band():
+    sp = population_speeds(1000, straggler_frac=0.1, seed=0)
+    assert sp.shape == (1000,) and sp.dtype == np.float32
+    slow = sp == np.float32(13.0)
+    # ~10% slow band, fast cluster clearly below it (gap stays well-posed)
+    assert 50 < slow.sum() < 200
+    assert sp[~slow].max() < 12.0
+
+
+# ---------------------------------------------------------------------------
+# plan_from_store == plan on equal observations
+
+
+def test_plan_from_store_matches_plan():
+    st = ClientStore.empty(10).register(np.arange(5), np.full(5, 10.0),
+                                        np.zeros(5))
+    lat = {0: 13.0, 1: 10.0, 2: 10.2, 3: 9.9, 4: 10.1}
+    st = st.update_from_round(list(lat), list(lat.values()), np.ones(5))
+    got = sg.plan_from_store(st, list(lat))
+    want = sg.plan(lat)
+    assert got.stragglers == want.stragglers == [0]
+    # store observations round-trip through f32; decisions are identical
+    assert got.t_target == pytest.approx(want.t_target, rel=1e-6)
+    assert got.rates == want.rates
+
+
+def test_plan_from_store_skips_unobserved():
+    st = ClientStore.empty(10).register(np.arange(6), np.full(6, 10.0),
+                                        np.zeros(6))
+    st = st.update_from_round([0, 1, 2], [13.0, 10.0, 10.1], np.ones(3))
+    plan = sg.plan_from_store(st, [0, 1, 2, 5])     # 5 never participated
+    assert plan.stragglers == [0]
+    empty = sg.plan_from_store(ClientStore.empty(4), [0, 1])
+    assert empty.stragglers == [] and empty.rates == {}
+
+
+# ---------------------------------------------------------------------------
+# Backend equivalence from a 10^4-client store
+
+
+@pytest.fixture(scope="module")
+def three_backends():
+    sims = {}
+    for b in ("sequential", "fleet", "sharded_fleet"):
+        sim = build_population(_pop_cfg(
+            backend=b, n_shards=2 if b == "sharded_fleet" else None))
+        sim.run(4)
+        sims[b] = sim
+    return sims
+
+
+def test_backends_agree_on_round_decisions(three_backends):
+    ref = three_backends["sequential"].server.history
+    for b, sim in three_backends.items():
+        for log, rlog in zip(sim.server.history, ref):
+            assert log.round_time == pytest.approx(rlog.round_time, rel=1e-9)
+            assert log.stragglers == rlog.stragglers
+            assert log.rates == rlog.rates
+
+
+def test_backends_agree_on_params(three_backends):
+    ref = three_backends["sequential"].server.params
+    for b, sim in three_backends.items():
+        _tree_close(sim.server.params, ref, atol=5e-6)
+
+
+def test_cohorts_resample_per_round(three_backends):
+    sim = three_backends["fleet"]
+    a, b = sim.cohort_ids(0), sim.cohort_ids(1)
+    assert not np.array_equal(a, b)
+    assert sim.store.n_active == 10_000
+
+
+def test_sharded_result_partials_consistent(three_backends):
+    """Hierarchical contract: the fixed-order sum of the materialized
+    per-shard partials IS the reduced numerator the aggregation applies."""
+    sim = build_population(_pop_cfg(backend="sharded_fleet", n_shards=2))
+    ids = sim.cohort_ids(0)
+    clients = sim._materialize(ids)
+    from repro.fl.rounds import make_backend
+    backend = make_backend("sharded_fleet", sim.model_cls, clients,
+                           sim.model_cls.UNIT_SPECS, n_shards=2)
+    res = backend.run_round(sim.server.params, {}, {})
+    pr_num, pr_w = res.shard_partials
+    num = jax.tree.map(lambda a: a[0] + a[1], pr_num)
+    assert _leaves_equal(num, res.num)
+    np.testing.assert_array_equal(np.asarray(pr_w[0] + pr_w[1]),
+                                  np.asarray(res.w_per_mask))
+    # and combine(partials) == the dense stacked aggregation
+    _tree_close(res.aggregate(sim.server.params),
+                super(type(res), res).aggregate(sim.server.params),
+                atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Bitwise determinism across device counts (CI: population-smoke runs the
+# suite under XLA_FLAGS=--xla_force_host_platform_device_count=2)
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >= 2 devices (forced host devices ok)")
+def test_sharded_bitwise_identical_across_device_counts():
+    from jax.sharding import Mesh
+
+    from repro.launch.mesh import make_host_mesh
+
+    def run(mesh):
+        sim = build_population(_pop_cfg(backend="sharded_fleet", n_shards=2),
+                               mesh=mesh)
+        ids = [sim.cohort_ids(r) for r in range(3)]
+        sim.run(3)
+        return ids, sim.server.params
+
+    m1 = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    ids1, p1 = run(m1)
+    ids2, p2 = run(make_host_mesh(data=2))
+    for a, b in zip(ids1, ids2):
+        np.testing.assert_array_equal(a, b)
+    assert _leaves_equal(p1, p2), "aggregated params must be bitwise equal"
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs >= 2 devices (forced host devices ok)")
+def test_cohort_sampling_bitwise_on_mesh_devices():
+    st = ClientStore.empty(10_000).register(
+        np.arange(10_000), population_speeds(10_000, seed=3),
+        np.zeros(10_000))
+    key = jax.random.PRNGKey(7)
+    ids_host = np.asarray(st.sample_cohort(key, 64))
+    on_dev1 = jax.device_put(st, jax.devices()[1])
+    np.testing.assert_array_equal(
+        np.asarray(on_dev1.sample_cohort(key, 64)), ids_host)
+
+
+# ---------------------------------------------------------------------------
+# Drift: recalibration reads the store and re-targets within one interval
+
+
+def test_drift_flips_membership_and_store_rates():
+    cfg = _pop_cfg(n_clients=64, cohort_size=64, backend="fleet",
+                   straggler_frac_pop=0.0, seed=3)
+    sim = build_population(cfg)
+    sim.set_speed(5, cfg.base_speed * cfg.slow_factor)
+    sim.run(2)
+    assert sim.server.plan.stragglers == [5]
+    assert float(sim.store.rates_of([5])[0]) < 1.0
+    # runtime shift: 5 recovers, 11 degrades — one calibration interval
+    # (calibrate_every=1 => the next round) flips both membership and the
+    # store's assigned rates
+    sim.set_speed(5, cfg.base_speed)
+    sim.set_speed(11, cfg.base_speed * 1.4)
+    sim.run_round()
+    assert sim.server.plan.stragglers == [11]
+    assert float(sim.store.rates_of([11])[0]) < 1.0
+    assert float(sim.store.rates_of([5])[0]) == 1.0
+    assert float(sim.store.straggler_ema[5]) > 0.0     # history remembers
+
+
+def test_single_trace_across_rounds():
+    """Round-over-round cohorts retrace nothing: one compiled cohort
+    program serves every steady-state round (constant shapes, varying
+    sample). Round 0 feeds host-resident init params; round 1+ params
+    carry the program's replicated NamedSharding — that transition is the
+    only compile allowed after the first."""
+    from repro.fl.shard_fleet import _sharded_cohort_fn
+    from repro.kernels.ops import _default_interpret
+    from repro.launch.mesh import make_host_mesh
+
+    sim = build_population(_pop_cfg(backend="sharded_fleet", n_shards=2))
+    sim.run(2)
+    fn = _sharded_cohort_fn(sim.model_cls,
+                            make_host_mesh(data=len(jax.devices())), 2,
+                            False, _default_interpret())
+    n0 = fn._cache_size()
+    assert n0 <= 2
+    sim.run(2)
+    assert fn._cache_size() == n0

@@ -1,12 +1,12 @@
-"""Typed SimulationConfig API + legacy build_simulation shim (fl/simulation).
+"""Typed SimulationConfig API (fl/simulation).
 
-Contract: the dataclass path and the deprecated kwargs path build identical
-simulations; unknown policies/backends/workloads fail at construction; and
-per-client (lr, local_epochs) heterogeneity flows from CohortConfig into the
-fleet engine's vmapped arrays.
+Contract: simulations are described by the SimulationConfig dataclass —
+the legacy ``build_simulation(workload, **kwargs)`` shim completed its
+deprecation cycle and now fails loudly with a migration hint. Unknown
+policies/backends/workloads fail at construction; per-client
+(lr, local_epochs) heterogeneity flows from CohortConfig into the fleet
+engine's vmapped arrays.
 """
-import warnings
-
 import numpy as np
 import pytest
 
@@ -26,34 +26,26 @@ def test_config_path_builds_and_runs():
     assert sim.backend == "fleet"
 
 
-def test_legacy_shim_warns_and_matches_config_path():
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        old = build_simulation("femnist", n_clients=3, n_data=240,
-                               method="random", seed=4)
-        assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    new = build_simulation(_mini(policy="random", seed=4))
-    assert old.server.cfg.method == new.server.cfg.method == "random"
-    assert len(old.clients) == len(new.clients)
-    for a, b in zip(old.clients, new.clients):
-        assert a.lr == b.lr and a.speed == b.speed
-        np.testing.assert_array_equal(a.x, b.x)
-    # workload= keyword form of the legacy call still works too
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        kw = build_simulation(workload="femnist", n_clients=3, n_data=240)
-    assert len(kw.clients) == 3
+def test_legacy_kwargs_shape_removed():
+    """The PR-2 DeprecationWarning shim is gone: positional workload
+    strings (and any non-SimulationConfig argument) raise TypeError with
+    a migration pointer."""
+    with pytest.raises(TypeError, match="SimulationConfig"):
+        build_simulation("femnist")
+    with pytest.raises(TypeError, match="removed"):
+        build_simulation({"workload": "femnist", "n_clients": 3})
+    # the kwargs never existed on the typed signature either
+    with pytest.raises(TypeError):
+        build_simulation(_mini(), n_clients=9)
+    with pytest.raises(TypeError):
+        build_simulation("femnist", n_clients=2, n_data=240)
 
 
-def test_legacy_run_experiment_shim():
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        sim, hist = run_experiment("femnist", 1, n_clients=2, n_data=240,
-                                   eval_every=0)
-        assert any(issubclass(x.category, DeprecationWarning) for x in w)
+def test_run_experiment_takes_config_only():
+    sim, hist = run_experiment(_mini(), 1, eval_every=0)
     assert len(hist) == 1
-    sim2, hist2 = run_experiment(_mini(), 1, eval_every=0)
-    assert len(hist2) == 1
+    with pytest.raises(TypeError, match="SimulationConfig"):
+        run_experiment("femnist", 1)
 
 
 def test_unknown_policy_backend_workload_rejected():
@@ -63,13 +55,14 @@ def test_unknown_policy_backend_workload_rejected():
         _mini(backend="gpu_cluster")
     with pytest.raises(ValueError, match="workload"):
         SimulationConfig(workload="imagenet")
-    with pytest.raises(TypeError, match="unknown"):
-        build_simulation("femnist", n_clients=2, n_data=240, frobnicate=1)
 
 
-def test_config_plus_kwargs_rejected():
-    with pytest.raises(TypeError, match="overrides"):
-        build_simulation(_mini(), n_clients=9)
+def test_n_shards_requires_sharded_backend():
+    with pytest.raises(ValueError, match="n_shards"):
+        _mini(backend="fleet", n_shards=2)
+    cfg = _mini(backend="sharded_fleet", n_shards=1,
+                cohort=CohortConfig(n_clients=3, n_data=240))
+    assert cfg.n_shards == 1
 
 
 def test_per_client_hyperparameters_flow_to_fleet():
@@ -80,7 +73,6 @@ def test_per_client_hyperparameters_flow_to_fleet():
     assert [c.local_epochs for c in sim.clients] == [1, 2, 1]
     eng = sim.server.engine
     np.testing.assert_allclose(eng.lrs, [0.004, 0.01, 0.002])
-    assert eng.client_steps.tolist() != [eng.steps] * 3 or True
     sim.server.run_round()     # heterogeneous cohort executes
 
 
@@ -94,3 +86,14 @@ def test_per_client_length_mismatch_rejected():
 def test_policy_none_still_supported():
     sim = build_simulation(_mini(policy="none"))
     assert sim.server.cfg.method == "none"
+
+
+def test_simulation_owns_store():
+    """Every simulation carries a ClientStore slotting one client per id;
+    set_speed writes through to it (tests/test_population.py covers the
+    store itself)."""
+    sim = build_simulation(_mini())
+    assert sim.store.n_active == 3
+    sim.set_speed(1, 99.0)
+    assert float(sim.store.speeds_of([1])[0]) == 99.0
+    assert sim.clients[1].speed == 99.0

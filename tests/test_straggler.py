@@ -1,5 +1,14 @@
-"""Straggler detection + linear-time sub-model sizing (paper §5)."""
+"""Straggler detection + linear-time sub-model sizing (paper §5).
+
+Includes recalibration-under-drift properties: latencies crossing the gap
+threshold flip membership (and hence the assigned dropout rate) on the
+very next plan — the one-calibration-interval adaptation the paper's
+Fig. 4b claims. Property checks are seeded numpy sweeps (hypothesis is
+not available in the container)."""
+import numpy as np
+
 from repro.core import straggler as sg
+from repro.fl.population import ClientStore
 
 
 def test_detect_by_frac():
@@ -23,6 +32,128 @@ def test_plan_picks_inverse_speedup():
     assert plan.rates[0] == 0.75
 
 
+def test_detect_tied_straggler_band():
+    """Population cohorts hold many stragglers at the SAME slow speed; the
+    gap split must see past the ties to the band/cluster boundary."""
+    lat = {i: 13.0 for i in range(5)}
+    lat.update({i: 10.0 + 0.01 * i for i in range(5, 40)})
+    assert sorted(sg.detect_stragglers(lat)) == [0, 1, 2, 3, 4]
+    plan = sg.plan(lat)
+    assert sorted(plan.stragglers) == [0, 1, 2, 3, 4]
+    assert all(plan.rates[c] < 1.0 for c in range(5))
+    # an all-tied cohort has no gap, hence no stragglers
+    assert sg.detect_stragglers({i: 10.0 for i in range(6)}) == []
+
+
+def test_detect_gapped_chain():
+    """Consecutively-gapped slow clients are all in the band (the largest
+    gap is the one separating them from the cluster)."""
+    lat = {0: 13.0, 1: 11.5, 2: 10.0, 3: 9.95}
+    assert sg.detect_stragglers(lat) == [0, 1]
+
+
+def test_detect_band_survives_noise_filled_gaps():
+    """Population-scale property: once a cohort has thousands of noisy
+    draws, the slow band's fastest draw and the cluster's slowest draw
+    touch — adjacent-gap detection goes blind, the density-dip split
+    (plan_from_store's rule) still recovers the band exactly."""
+    rng = np.random.RandomState(0)
+    n, frac = 4000, 0.1
+    slow = rng.rand(n) < frac
+    speed = np.where(slow, 13.0, 10.0 * (1 + 0.05 * np.clip(
+        rng.randn(n), -2.5, 2.5)))
+    lat = {i: float(speed[i] * (1 + 0.03 * rng.randn())) for i in range(n)}
+    ordered = np.sort(list(lat.values()))
+    # the premise: no 1.10 adjacent gap survives at this cohort size
+    assert (ordered[1:] / ordered[:-1]).max() < 1.10
+    assert sg.detect_stragglers(lat) == []
+    got = set(sg.detect_band(lat))
+    want = set(np.flatnonzero(slow).tolist())
+    # dip split recovers the band modulo clients whose draws landed inside
+    # the other mode (boundary noise), which are individually ambiguous
+    assert len(got ^ want) < 0.02 * n
+    assert len(got & want) > 0.9 * len(want)
+
+
+def test_detect_band_agrees_with_gap_when_separated():
+    for lat in ({0: 13.0, 1: 10.0, 2: 10.2, 3: 9.9, 4: 10.1},
+                {0: 10.3, 1: 10.0, 2: 10.2, 3: 9.9, 4: 10.1},
+                {0: 13.0, 1: 10.0, 2: 9.8}):
+        assert sg.detect_band(lat) == sg.detect_stragglers(lat)
+
+
 def test_pick_rate_bounds():
     assert sg.pick_rate(1.0) == 0.95
     assert sg.pick_rate(2.5) == 0.5
+
+
+# ---------------------------------------------------------------------------
+# Recalibration under drift
+
+
+def test_drift_flips_membership_next_plan():
+    """A speed change crossing the gap threshold re-targets in ONE plan:
+    no hysteresis, exactly the per-calibration-step rule of paper §5."""
+    lat = {0: 13.0, 1: 10.0, 2: 10.2, 3: 9.9}
+    assert sg.plan(lat).stragglers == [0]
+    lat[0], lat[2] = 10.1, 13.5            # 0 recovers, 2 degrades
+    after = sg.plan(lat)
+    assert after.stragglers == [2]
+    assert 0 not in after.rates and after.rates[2] < 1.0
+
+
+def test_threshold_crossing_is_sharp():
+    """Property: scanning one client's latency across gap_factor * t_next
+    flips membership exactly at the boundary, and its dropout rate tracks
+    1/speedup monotonically (linear-time model, App A.3)."""
+    base = {1: 10.0, 2: 10.2, 3: 9.9}
+    prev_rate = 1.0
+    for scale in np.linspace(1.0, 2.0, 21):
+        lat = {0: 10.2 * float(scale), **base}
+        plan = sg.plan(lat, gap_factor=1.10)
+        if scale <= 1.10:                  # within the gap: no straggler
+            assert plan.stragglers == []
+        else:
+            assert plan.stragglers == [0]
+            rate = plan.rates[0]
+            assert rate <= prev_rate       # slower => smaller sub-model
+            prev_rate = rate
+            assert rate == sg.pick_rate(lat[0] / 10.2)
+
+
+def test_plan_properties_random_latencies():
+    """Property sweep: for random latency draws, every plan satisfies the
+    paper's invariants — stragglers are the slowest clients, t_target is
+    the slowest NON-straggler, and rates are valid sub-model sizes < 1."""
+    rng = np.random.RandomState(0)
+    sizes = sg.DEFAULT_SIZES
+    for _ in range(200):
+        n = rng.randint(2, 12)
+        lat = {i: float(10.0 * (1.0 + 0.3 * rng.rand()))
+               for i in range(n)}
+        if rng.rand() < 0.5:               # sometimes a clear straggler band
+            for j in range(rng.randint(0, max(1, n // 3))):
+                lat[j] *= 1.5
+        plan = sg.plan(lat)
+        non = [c for c in lat if c not in plan.stragglers]
+        if plan.stragglers:
+            assert plan.t_target == max(lat[c] for c in non)
+            slowest_non = max(lat[c] for c in non)
+            for c in plan.stragglers:
+                assert lat[c] > slowest_non     # stragglers ARE the slow tail
+                assert plan.rates[c] in sizes and plan.rates[c] < 1.0
+                assert plan.speedups[c] == lat[c] / plan.t_target
+
+
+def test_store_backed_drift_flips_within_one_interval():
+    """plan_from_store sees drift as soon as the round that observed it is
+    recorded — membership and rates flip within one calibration interval."""
+    ids = [0, 1, 2, 3]
+    st = ClientStore.empty(8).register(ids, np.full(4, 10.0), np.zeros(4))
+    st = st.update_from_round(ids, [13.0, 10.0, 10.2, 9.9], np.ones(4))
+    assert sg.plan_from_store(st, ids).stragglers == [0]
+    # next round's observations cross the threshold the other way
+    st = st.update_from_round(ids, [10.0, 10.1, 13.4, 10.0], np.ones(4))
+    after = sg.plan_from_store(st, ids)
+    assert after.stragglers == [2]
+    assert after.rates[2] < 1.0 and 0 not in after.rates

@@ -6,7 +6,8 @@ round time, calibration overhead stays small (paper: <5%)."""
 import numpy as np
 import pytest
 
-from repro.fl.simulation import build_simulation
+from repro.fl.simulation import (CohortConfig, SimulationConfig,
+                                 build_simulation)
 
 pytestmark = pytest.mark.slow    # multi-minute: tier-1 only, not the CI fast tier
 
@@ -15,8 +16,10 @@ pytestmark = pytest.mark.slow    # multi-minute: tier-1 only, not the CI fast ti
 def run():
     out = {}
     for method in ("none", "invariant"):
-        sim = build_simulation("femnist", n_clients=5, straggler_ids=(0,),
-                               method=method, n_data=1000, seed=0)
+        sim = build_simulation(SimulationConfig(
+            workload="femnist", policy=method, seed=0,
+            cohort=CohortConfig(n_clients=5, straggler_ids=(0,),
+                                n_data=1000)))
         hist = sim.server.run(14, eval_every=7)
         out[method] = (sim, hist)
     return out
