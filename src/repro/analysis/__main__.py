@@ -24,15 +24,30 @@ def main(argv=None) -> int:
                          "dropped-dW-zero)")
     ap.add_argument("--kernels", action="store_true",
                     help="kernel shape/grammar contracts (static sweep)")
+    ap.add_argument("--contract", action="append", metavar="NAME",
+                    help="run only the named trace-time contract(s) "
+                         "(repeatable; see analysis.contracts.CHECKS)")
     ap.add_argument("--all", action="store_true",
                     help="run every pass (default when none is selected)")
     ap.add_argument("paths", nargs="*", default=None,
                     help="files/dirs for --lint (default: src)")
     args = ap.parse_args(argv)
 
-    if not (args.lint or args.contracts or args.kernels):
+    if not (args.lint or args.contracts or args.kernels or args.contract):
         args.all = True
     problems = 0
+
+    if args.contract and not args.all:
+        from repro.analysis.contracts import run_contracts
+        t0 = time.time()
+        vs = run_contracts(
+            progress=lambda n: print(f"[contracts] {n} ...", flush=True),
+            only=args.contract)
+        for v in vs:
+            print(v)
+        print(f"[contracts] {len(vs)} violation(s) "
+              f"in {time.time() - t0:.1f}s")
+        return 1 if vs else 0
 
     if args.lint or args.all:
         from repro.analysis.lint import lint_paths

@@ -360,7 +360,7 @@ def check_population_no_host_sync() -> List[Violation]:
         np.zeros(64, np.int32))
     out += _trace_violations(
         "population-no-host-sync", "ClientStore.sample_cohort",
-        functools.partial(_sample_cohort, size=8), store,
+        functools.partial(_sample_cohort, size=8), store.active,
         jax.random.PRNGKey(0))
     ids = jnp.arange(8, dtype=jnp.int32)
     out += _trace_violations(
@@ -389,6 +389,56 @@ def check_population_no_host_sync() -> List[Violation]:
     out += _trace_violations(
         "population-no-host-sync", "combine_partials",
         combine_partials, params, num, jnp.ones((1,), jnp.float32), bank)
+    return out
+
+
+def check_async_single_trace() -> List[Violation]:
+    """The async server step compiles once at steady state: every dispatch
+    group is capacity-padded to buffer_k clients (one cohort-program
+    shape), every drained buffer is exactly buffer_k arrivals with a
+    rebuilt mask bank of constant row count (policy='none' holds it at 1,
+    as in the population check — bank rows are legitimately shape and move
+    only on calibration), so neither the dispatch program nor
+    `aggregate_buffered` may retrace per buffer, whatever arrival order
+    the virtual clock produces. Round 0 feeds host-resident init params;
+    steady state starts once params carry device sharding — budget <= 2
+    traces for the init transition, then the caches must freeze."""
+    from repro.core.aggregate import aggregate_buffered
+    from repro.fl import fleet
+    from repro.fl.async_rounds import AsyncConfig
+    from repro.fl.population import PopulationConfig, build_population
+    from repro.core.straggler import ArrivalModel
+
+    cfg = PopulationConfig(
+        n_clients=512, cohort_size=4, workload="synth", backend="async",
+        policy="none", n_partitions=8, samples_per_partition=20,
+        async_cfg=AsyncConfig(buffer_k=4, concurrency=8,
+                              arrival=ArrivalModel(tail_sigma=0.5, seed=0)),
+        seed=0)
+    sim = build_population(cfg)
+    before = set(fleet._COHORT_CACHE)
+    agg0 = aggregate_buffered._cache_size()
+    sim.run(2)
+    new = [k for k in fleet._COHORT_CACHE if k not in before]
+    progs = [fleet._COHORT_CACHE[k] for k in new] or [
+        fleet._COHORT_CACHE[("SynthMLP", False, True)]]
+    n0 = [p._cache_size() for p in progs]
+    agg1 = aggregate_buffered._cache_size()
+    sim.run(3)                  # more buffers, different arrival orders
+    out = []
+    n1 = [p._cache_size() for p in progs]
+    agg2 = aggregate_buffered._cache_size()
+    if n1 != n0:
+        out.append(Violation(
+            "single-trace-async", "async dispatch program",
+            f"cohort program retraced at steady state ({n0} -> {n1}): a "
+            f"dispatch-group shape is leaking arrival structure"))
+    if not (agg1 - agg0 <= 2 and agg2 == agg1):
+        out.append(Violation(
+            "single-trace-async", "aggregate_buffered",
+            f"buffer aggregation traced {agg1 - agg0} times in 2 rounds / "
+            f"{agg2 - agg1} more in 3 rounds (want <= 2 then 0): buffer "
+            f"composition is leaking into program shape"))
     return out
 
 
@@ -540,15 +590,25 @@ CHECKS: Dict[str, Callable[[], List[Violation]]] = {
     "single-trace-fleet": check_fleet_single_trace,
     "single-trace-serve": check_serve_single_trace,
     "single-trace-population": check_population_single_trace,
+    "single-trace-async": check_async_single_trace,
     "population-no-host-sync": check_population_no_host_sync,
     "dw-zero-ffn": check_dropped_dw_zero_ffn,
     "dw-zero-attn": check_dropped_dw_zero_attn,
 }
 
 
-def run_contracts(progress=None) -> List[Violation]:
+def run_contracts(progress=None, only=None) -> List[Violation]:
+    """Run trace-time contracts; `only` narrows to a list of CHECKS names
+    (unknown names are a loud error, not an empty green run)."""
+    checks = CHECKS
+    if only:
+        unknown = [n for n in only if n not in CHECKS]
+        if unknown:
+            raise KeyError(f"unknown contract(s) {unknown}; "
+                           f"available: {sorted(CHECKS)}")
+        checks = {n: CHECKS[n] for n in only}
     out = []
-    for name, fn in CHECKS.items():
+    for name, fn in checks.items():
         if progress:
             progress(name)
         try:

@@ -93,6 +93,47 @@ def aggregate_stacked(global_params, stacked_deltas, weights,
     return combine_partials(global_params, num, w_per_mask, mask_bank)
 
 
+def staleness_scale(staleness, exponent):
+    """Per-arrival staleness discount for buffered async FedAvg, normalized
+    so a uniformly-stale buffer degenerates to plain masked FedAvg.
+
+        scale_i = (1 + s_i)^(-a) / max_j (1 + s_j)^(-a)
+
+    s_i is the number of server versions that advanced between client i's
+    dispatch and its arrival (0 = trained on current params); `a` is the
+    polynomial discount exponent (FedBuff's s^(-a) family, shifted so s=0
+    is well-defined). The max-normalization gives two exact identities the
+    async tests pin bitwise:
+
+      * all-fresh buffer (s == 0):    (1+0)^(-a) == 1.0 and x/1.0 == x, so
+        every scale is exactly 1.0 — async == sync aggregation;
+      * uniformly-stale buffer:       x/x == 1.0 exactly in IEEE754, so a
+        buffer where everyone is equally late is NOT down-weighted into a
+        vanishing update — relative freshness is what matters.
+    """
+    s = jnp.asarray(staleness, jnp.float32)
+    a = jnp.asarray(exponent, jnp.float32)
+    raw = (1.0 + s) ** (-a)
+    return raw / jnp.max(raw)
+
+
+@jax.jit
+def aggregate_buffered(global_params, stacked_deltas, weights,
+                       mask_bank, mask_idx, staleness, exponent):
+    """`aggregate_stacked` for an async arrival buffer (fl/async_rounds.py):
+    identical masked-FedAvg pipeline (`partial_sums` -> `combine_partials`),
+    with each arrival's sample-count weight scaled by `staleness_scale`
+    before BOTH the numerator and the per-mask denominator — a stale
+    straggler's coordinates are discounted consistently, so coordinates
+    only it trained still average to its (discounted) delta rather than
+    shrinking toward zero. With zero staleness everywhere the scaled
+    weights equal `weights` bitwise and this is `aggregate_stacked`."""
+    w = weights.astype(jnp.float32) * staleness_scale(staleness, exponent)
+    k = jax.tree.leaves(mask_bank)[0].shape[0]
+    num, w_per_mask = partial_sums(stacked_deltas, w, mask_idx, k)
+    return combine_partials(global_params, num, w_per_mask, mask_bank)
+
+
 def aggregate(global_params, updates: Sequence[ClientUpdate]):
     """Participation-weighted FedAvg."""
     num = jax.tree.map(jnp.zeros_like, global_params)

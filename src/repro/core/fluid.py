@@ -45,6 +45,9 @@ class FluidConfig:
 class RoundLog:
     round: int = 0
     round_time: float = 0.0                # max client sim time (sync FL)
+    clock: float = 0.0                     # virtual wall-clock (async FL)
+    staleness_mean: float = 0.0            # buffer staleness (async FL)
+    staleness_max: float = 0.0
     straggler_time: float = 0.0
     t_target: float = 0.0
     stragglers: List[int] = field(default_factory=list)
@@ -137,11 +140,26 @@ class FluidServer:
         result = backend.run_round(self.params, keep_maps, rates_used)
         actual = dict(result.sim_times)
 
+        # An async backend reports arrivals, not the dispatch cohort: who
+        # was observed (sim_times), the rate each arrival actually trained
+        # (rates_trained — assigned at ITS dispatch, not this round's), and
+        # who calibration should reason about (calib_ids). Synchronous
+        # backends expose none of these, and every fallback below
+        # reproduces the synchronous behavior exactly.
+        obs_rates = getattr(result, "rates_trained", None)
+        if obs_rates is None:
+            obs_rates = rates_used
+
         # full-model-equivalent latency: a straggler that trained a sub-model
         # of size r would take time/r on the full model (linear model, A.3)
-        latencies = {cid: t / rates_used.get(cid, 1.0)
+        latencies = {cid: t / obs_rates.get(cid, 1.0)
                      for cid, t in actual.items()}
         log.round_time = max(actual.values())
+        log.clock = float(getattr(result, "clock", 0.0))
+        stale = getattr(result, "staleness", None)
+        if stale is not None and len(stale):
+            log.staleness_mean = float(np.mean(stale))
+            log.staleness_max = float(np.max(stale))
         if self.plan and self.plan.stragglers:
             st = [actual[c] for c in self.plan.stragglers if c in actual]
             log.straggler_time = max(st) if st else 0.0
@@ -150,11 +168,17 @@ class FluidServer:
             log.rates = dict(self.plan.rates)
 
         # -------- record observations (speed history feeds recalibration)
-        if self.store is not None:
+        # obs_ids: whoever was actually observed, in cohort order first
+        # (== ids exactly for synchronous backends) then any arrival from
+        # an earlier dispatch, in buffer order
+        ids_set = set(ids)
+        obs_ids = ([c for c in ids if c in actual]
+                   + [c for c in actual if c not in ids_set])
+        if self.store is not None and obs_ids:
             self.store = self.store.update_from_round(
-                np.asarray(ids, np.int32),
-                np.asarray([latencies[c] for c in ids], np.float32),
-                np.asarray([rates_used.get(c, 1.0) for c in ids],
+                np.asarray(obs_ids, np.int32),
+                np.asarray([latencies[c] for c in obs_ids], np.float32),
+                np.asarray([obs_rates.get(c, 1.0) for c in obs_ids],
                            np.float32))
 
         # -------- aggregate
@@ -162,6 +186,9 @@ class FluidServer:
 
         # -------- calibration (server-side; wall-clock measured as overhead)
         t0 = time.perf_counter()
+        # calibration scope: the clients with fresh observations — the
+        # cohort for synchronous backends, this buffer's arrivals for async
+        calib_ids = list(getattr(result, "calib_ids", None) or ids)
         if self.round % cfg.calibrate_every == 0:
             per_client = result.non_straggler_stats(prev)
             if per_client:
@@ -169,7 +196,7 @@ class FluidServer:
                     self.th = inv.initial_threshold(per_client)
                 if self.store is not None:
                     self.plan = strag.plan_from_store(
-                        self.store, ids, frac=cfg.straggler_frac,
+                        self.store, calib_ids, frac=cfg.straggler_frac,
                         sizes=cfg.submodel_sizes)
                 else:
                     self.plan = strag.plan(latencies,
@@ -187,12 +214,13 @@ class FluidServer:
                                       / self._total_neurons())
                 if self.store is not None:
                     # write the new plan back: stragglers get their rate,
-                    # everyone else in the cohort returns to the full model
+                    # everyone else observed returns to the full model
                     stragglers = set(self.plan.stragglers)
                     self.store = self.store.assign_rates(
-                        np.asarray(ids, np.int32),
+                        np.asarray(calib_ids, np.int32),
                         np.asarray([self._rate_for(c) if c in stragglers
-                                    else 1.0 for c in ids], np.float32))
+                                    else 1.0 for c in calib_ids],
+                                   np.float32))
         log.calib_time = time.perf_counter() - t0
 
         if eval_now and self.eval_fn is not None:

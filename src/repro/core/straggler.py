@@ -10,6 +10,8 @@ change at runtime (paper Fig. 4b).
 """
 from __future__ import annotations
 
+import math
+
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -29,14 +31,22 @@ class StragglerPlan:
 def detect_stragglers(latencies: Dict[int, float],
                       frac: Optional[float] = None,
                       gap_factor: float = 1.10) -> List[int]:
-    """If frac given: slowest ceil(frac*C) clients. Else: the slow *band* —
-    everyone above the largest adjacent gap in the sorted latencies,
-    provided that gap exceeds gap_factor. The split must tolerate ties:
-    population cohorts hold many stragglers at the *same* slow speed, so a
-    walk that stops at the first non-gapped adjacent pair would never see
-    past the tied band (it did, before the population layer)."""
+    """If frac given: slowest round(frac*C) clients (at least one for any
+    frac > 0; frac == 0.0 selects nobody — it used to flag one client
+    anyway through an unconditional max(1, ...), which made "dropout off"
+    configs silently run dropout). frac outside [0, 1] is a ValueError
+    rather than a silent over-selection. Else: the slow *band* — everyone
+    above the largest adjacent gap in the sorted latencies, provided that
+    gap exceeds gap_factor. The split must tolerate ties: population
+    cohorts hold many stragglers at the *same* slow speed, so a walk that
+    stops at the first non-gapped adjacent pair would never see past the
+    tied band (it did, before the population layer)."""
     ids = sorted(latencies, key=lambda c: latencies[c], reverse=True)
     if frac is not None:
+        if not 0.0 <= frac <= 1.0:
+            raise ValueError(f"frac must be in [0, 1], got {frac}")
+        if frac == 0.0:
+            return []
         k = max(1, int(round(frac * len(ids))))
         return ids[:k]
     if len(ids) < 2:
@@ -150,3 +160,59 @@ def plan_from_store(store, client_ids: Sequence[int],
                     gap_factor=gap_factor)
     return _plan_with(latencies,
                       detect_band(latencies, gap_factor=gap_factor), sizes)
+
+
+# ---------------------------------------------------------------------------
+# Arrival-process model (asynchronous rounds, fl/async_rounds.py)
+
+@dataclass
+class ArrivalModel:
+    """What happens to a dispatched client between "starts training" and
+    "its delta reaches the server" — the arrival process of the async
+    buffered backend (fl/async_rounds.py).
+
+    The *base* latency comes from the client speed model
+    (SimClient._sim_time, incl. its lognormal heavy tail via `tail_sigma`
+    on the client, so the synchronous baseline experiences the identical
+    distribution). This model layers the async-only failure modes on top:
+
+      * `tail_sigma`  — extra multiplicative lognormal spread applied only
+        to async arrivals (network variance not visible to a barrier that
+        already waits for the max). Usually 0.0 for fair benchmarks.
+      * `drop_prob`   — per-dispatch probability the client falls off
+        mid-round. A dropped client is NOT lost: it reconnects after an
+        Exp(reconnect_mean) pause, resumes from where it stopped, and its
+        delta lands in a later buffer with higher staleness.
+      * `max_drops`   — cap on consecutive dropouts per dispatch.
+
+    Draws come from a private seeded RandomState so arrival randomness is
+    reproducible and independent of the clients' own RNG streams. With
+    everything at zero the model is an exact pass-through — `draw(t)`
+    returns (t, 0) without consuming randomness — which the zero-spread
+    fleet==async equivalence test relies on."""
+    tail_sigma: float = 0.0
+    drop_prob: float = 0.0
+    reconnect_mean: float = 30.0
+    max_drops: int = 2
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.tail_sigma < 0.0:
+            raise ValueError(f"tail_sigma must be >= 0, got {self.tail_sigma}")
+        if not 0.0 <= self.drop_prob < 1.0:
+            raise ValueError(f"drop_prob must be in [0, 1), "
+                             f"got {self.drop_prob}")
+        self._rng = np.random.RandomState(self.seed)
+
+    def draw(self, base: float):
+        """(arrival latency, n_dropouts) for one dispatched job whose
+        compute+transfer time is `base` emulated seconds."""
+        lat = float(base)
+        if self.tail_sigma > 0.0:
+            lat *= math.exp(self.tail_sigma * float(self._rng.randn()))
+        drops = 0
+        while (self.drop_prob > 0.0 and drops < self.max_drops
+               and self._rng.rand() < self.drop_prob):
+            lat += float(self._rng.exponential(self.reconnect_mean))
+            drops += 1
+        return max(lat, 1e-6), drops

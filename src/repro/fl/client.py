@@ -19,6 +19,8 @@ Two execution paths share the same data/speed model:
 """
 from __future__ import annotations
 
+import math
+
 from dataclasses import dataclass, field
 from typing import Dict, Optional
 
@@ -101,6 +103,7 @@ class SimClient:
     speed: float                     # seconds per epoch at r = 1.0
     comm_s_per_mparam: float = 0.05  # transfer seconds per 1e6 params (x2)
     noise: float = 0.03
+    tail_sigma: float = 0.0          # lognormal heavy-tail sigma (0 = off)
     batch_size: int = 20
     local_epochs: int = 1
     lr: float = 0.01
@@ -108,7 +111,12 @@ class SimClient:
     _rng: np.random.RandomState = field(init=False, repr=False)
 
     def __post_init__(self):
-        self._rng = np.random.RandomState(self.seed + 1000 * self.id)
+        # modulo keeps the derived seed in RandomState's [0, 2**32) domain:
+        # capacity pads (fl/async_rounds.py) carry reserved negative ids,
+        # and in-range values pass through unchanged, so every pre-existing
+        # client stream is preserved bit-for-bit
+        self._rng = np.random.RandomState((self.seed + 1000 * self.id)
+                                          % (2 ** 32))
 
     @property
     def n_samples(self) -> int:
@@ -126,10 +134,18 @@ class SimClient:
         return self._rng.permutation(self.n_samples)[:nb * bs]
 
     def _sim_time(self, rate: float, n_params: int) -> float:
-        """End-to-end emulated seconds (consumes one RNG draw): linear in
-        sub-model size + transfer term (paper App. A.3)."""
+        """End-to-end emulated seconds (consumes one RNG draw; a second
+        when tail_sigma > 0): linear in sub-model size + transfer term
+        (paper App. A.3). `tail_sigma` multiplies the compute time by a
+        lognormal draw — the heavy-tailed straggler latencies of the async
+        benchmark. It lives here, not in the async ArrivalModel, so the
+        synchronous barrier baseline experiences the identical latency
+        distribution; at 0.0 no extra draw is consumed, preserving every
+        pre-existing seeded run bit-for-bit."""
         sim = (self.speed * self.local_epochs * rate
                * (1.0 + self.noise * self._rng.randn()))
+        if self.tail_sigma > 0.0:
+            sim *= math.exp(self.tail_sigma * float(self._rng.randn()))
         sim += 2 * self.comm_s_per_mparam * n_params / 1e6
         return max(sim, 1e-6)
 

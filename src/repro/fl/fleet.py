@@ -132,16 +132,24 @@ class CohortResult:
     client_ids: List[int]
     sim_times: Dict[int, float]
     straggler_ids: frozenset
+    members: Optional[np.ndarray] = None   # (C,) bool; None = all real
+
+    def _is_member(self, i: int) -> bool:
+        return self.members is None or bool(self.members[i])
 
     def aggregate(self, global_params):
-        """Fused device-side masked FedAvg (== core.aggregate.aggregate)."""
+        """Fused device-side masked FedAvg (== core.aggregate.aggregate).
+        Padding slots (members[i] == False) carry zero weight AND zero
+        deltas (their step count is 0), so they cancel out of both the
+        numerator and the per-mask denominator."""
         return aggregate_stacked(global_params, self.deltas, self.weights,
                                  self.mask_bank, self.mask_idx)
 
     def non_straggler_stats(self, prev_params) -> List[Dict[str, np.ndarray]]:
         """Per-client invariant-neuron stats, computed batched on device."""
         sel = np.array([i for i, cid in enumerate(self.client_ids)
-                        if cid not in self.straggler_ids], dtype=np.int32)
+                        if cid not in self.straggler_ids
+                        and self._is_member(i)], dtype=np.int32)
         if sel.size == 0:
             return []
         picked = jax.tree.map(lambda d: d[sel], self.deltas)
@@ -153,6 +161,8 @@ class CohortResult:
         """Materialize sequential-style ClientUpdates (tests / inspection)."""
         out = []
         for i, cid in enumerate(self.client_ids):
+            if not self._is_member(i):
+                continue
             delta = jax.tree.map(lambda d: d[i], self.deltas)
             mask = None
             if cid in self.straggler_ids:
@@ -282,38 +292,57 @@ class FleetEngine:
     # ------------------------------------------------------------------- API
     def run_cohort(self, params, keep_maps: Dict[int, dict],
                    rates: Optional[Dict[int, float]] = None,
-                   lr=None, n_steps=None) -> CohortResult:
+                   lr=None, n_steps=None, members=None) -> CohortResult:
         """One FL round for the whole fleet: keep_maps/rates per straggler
         client id (absent => full model).
 
         lr: optional scalar or (C,) array overriding the clients' own
         learning rates; n_steps: optional (C,) int array capping each
         client's real SGD steps. Both are vmapped data — heterogeneous
-        values reuse the same compiled program as the uniform cohort."""
+        values reuse the same compiled program as the uniform cohort.
+
+        members: optional (C,) bool marking which slots are real clients —
+        partial-cohort execution for callers that must keep the program
+        shape capacity-padded while dispatching fewer than C clients
+        (fl/async_rounds.py pads every dispatch group to buffer_k). A
+        padding slot runs 0 SGD steps (all its sample weights are zero, so
+        its delta is exactly zero), carries zero aggregation weight, draws
+        no sim time (its RNG stream is never touched), and is excluded
+        from stats and updates()."""
         rates = rates or {}
+        C = len(self.clients)
         if lr is None:
             lrs = self.lrs
         else:
-            lrs = np.broadcast_to(np.asarray(lr, np.float32),
-                                  (len(self.clients),))
+            lrs = np.broadcast_to(np.asarray(lr, np.float32), (C,))
         if n_steps is not None:
             n_steps = np.asarray(n_steps, np.int32)
-            if n_steps.shape != (len(self.clients),):
-                raise ValueError(f"n_steps must be ({len(self.clients)},), "
+            if n_steps.shape != (C,):
+                raise ValueError(f"n_steps must be ({C},), "
                                  f"got {n_steps.shape}")
+        if members is not None:
+            members = np.asarray(members, bool)
+            if members.shape != (C,):
+                raise ValueError(f"members must be ({C},), "
+                                 f"got {members.shape}")
+            base_steps = self.client_steps if n_steps is None else n_steps
+            n_steps = np.where(members, base_steps, 0).astype(np.int32)
         xs, ys, sw = self._stacked_data(n_steps)
         bank, idx, n_by_row = self._mask_bank(params, keep_maps)
-        weights = jnp.asarray([c.n_samples for c in self.clients],
-                              jnp.float32)
+        w_host = np.asarray([c.n_samples for c in self.clients], np.float32)
+        if members is not None:
+            w_host = np.where(members, w_host, 0.0).astype(np.float32)
+        weights = jnp.asarray(w_host)
         deltas, extra = self._execute(params, bank, idx, xs, ys, sw,
                                       jnp.asarray(lrs), weights)
         idx_host = np.asarray(idx)
         sim_times = {
             c.id: c.draw_sim_time(rates.get(c.id, 1.0),
                                   int(n_by_row[idx_host[i]]))
-            for i, c in enumerate(self.clients)}
+            for i, c in enumerate(self.clients)
+            if members is None or members[i]}
         return self._wrap_result(
             extra, engine=self, deltas=deltas, weights=weights,
             mask_bank=bank, mask_idx=idx,
             client_ids=[c.id for c in self.clients], sim_times=sim_times,
-            straggler_ids=frozenset(keep_maps))
+            straggler_ids=frozenset(keep_maps), members=members)

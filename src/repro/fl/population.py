@@ -70,10 +70,12 @@ class ClientStore:
     data_shard: jnp.ndarray           # (N,) i32 dataset partition id
     rounds_participated: jnp.ndarray  # (N,) i32
     active: jnp.ndarray               # (N,) bool registered & eligible
+    in_flight: jnp.ndarray            # (N,) bool dispatched, not yet arrived
 
     # ------------------------------------------------------------ pytree
     _FIELDS = ("speed", "speed_ema", "speed_hist", "straggler_ema",
-               "dropout_rate", "data_shard", "rounds_participated", "active")
+               "dropout_rate", "data_shard", "rounds_participated", "active",
+               "in_flight")
 
     def tree_flatten(self):
         return tuple(getattr(self, f) for f in self._FIELDS), None
@@ -107,6 +109,7 @@ class ClientStore:
             data_shard=jnp.zeros((capacity,), jnp.int32),
             rounds_participated=jnp.zeros((capacity,), jnp.int32),
             active=jnp.zeros((capacity,), bool),
+            in_flight=jnp.zeros((capacity,), bool),
         )
 
     def register(self, slots, speeds, data_shards) -> "ClientStore":
@@ -121,14 +124,41 @@ class ClientStore:
         )
 
     # --------------------------------------------------------------- ops
-    def sample_cohort(self, key, size: int) -> jnp.ndarray:
+    def sample_cohort(self, key, size: int,
+                      available_only: bool = False) -> jnp.ndarray:
         """Seeded without-replacement sample of `size` active clients.
 
-        Gumbel top-k: score active clients by iid Gumbel noise and take the
-        k best — a fixed-shape program whose result depends only on (store,
-        key), never on device layout. Ids come back sorted so downstream
-        host loops are order-stable."""
-        return _sample_cohort(self, key, size)
+        Gumbel top-k: score eligible clients by iid Gumbel noise and take
+        the k best — a fixed-shape program whose result depends only on
+        (eligibility, key), never on device layout. Ids come back sorted so
+        downstream host loops are order-stable. `available_only=True`
+        additionally excludes clients currently in flight (dispatched by
+        the async backend, delta not yet arrived).
+
+        Raises ValueError when fewer than `size` clients are eligible:
+        top_k over the -inf scores of ineligible slots would otherwise
+        silently hand back inactive/unregistered (or already-in-flight)
+        ids, which downstream code would happily materialize as zero-speed
+        phantom clients. The check is a host-side sync on one scalar —
+        sampling is a per-round host decision, not inner-loop device code,
+        so the sync is free and the failure is loud."""
+        mask = self.active
+        if available_only:
+            mask = jnp.logical_and(mask, jnp.logical_not(self.in_flight))
+        pool = int(jnp.sum(mask))
+        if size > pool:
+            raise ValueError(
+                f"sample_cohort: requested {size} clients but only {pool} "
+                f"are {'available' if available_only else 'active'} "
+                f"(capacity {self.capacity})")
+        return _sample_cohort(mask, key, size)
+
+    def mark_in_flight(self, ids, value: bool) -> "ClientStore":
+        """Flip the in-flight flag for `ids` (async dispatch/arrival
+        bookkeeping — fl/async_rounds.py)."""
+        idx = jnp.asarray(ids, jnp.int32)
+        return dataclasses.replace(
+            self, in_flight=self.in_flight.at[idx].set(bool(value)))
 
     def update_from_round(self, ids, latencies, rates) -> "ClientStore":
         """Record one round's observations for the cohort `ids`.
@@ -177,9 +207,13 @@ class ClientStore:
 
 
 @functools.partial(jax.jit, static_argnames=("size",))
-def _sample_cohort(store: ClientStore, key, size: int) -> jnp.ndarray:
-    g = jax.random.gumbel(key, (store.capacity,), jnp.float32)
-    score = jnp.where(store.active, g, -jnp.inf)
+def _sample_cohort(mask, key, size: int) -> jnp.ndarray:
+    """Gumbel top-k over an eligibility mask. The Gumbel field depends only
+    on (key, capacity), so the same key yields the same cohort on any
+    device count — and adding exclusions (in-flight clients) only removes
+    candidates, it never reshuffles the scores of the rest."""
+    g = jax.random.gumbel(key, mask.shape, jnp.float32)
+    score = jnp.where(mask, g, -jnp.inf)
     _, ids = jax.lax.top_k(score, size)
     return jnp.sort(ids).astype(jnp.int32)
 
@@ -232,6 +266,7 @@ class PopulationConfig:
     cohort_size: int = 100
     workload: str = "synth"
     backend: str = "fleet"            # fl.rounds.BACKEND_NAMES
+                                      # ("async" => AsyncPopulationSim)
     policy: str = "invariant"
     n_shards: Optional[int] = None    # sharded_fleet: logical shards (None
                                       # => one per mesh device)
@@ -245,6 +280,9 @@ class PopulationConfig:
     straggler_frac: Optional[float] = None   # detection override (None=gap)
     use_kernels: bool = False
     history: int = DEFAULT_HISTORY
+    tail_sigma: float = 0.0           # client-side lognormal latency tail
+    async_cfg: Optional[object] = None  # fl.async_rounds.AsyncConfig when
+                                        # backend == "async"
     seed: int = 0
 
 
@@ -298,7 +336,7 @@ class PopulationSim:
                             self.ds.y[self._parts[s]],
                             speed=float(sp), batch_size=self.batch_size,
                             lr=self.lr, local_epochs=self.cfg.local_epochs,
-                            seed=seed)
+                            tail_sigma=self.cfg.tail_sigma, seed=seed)
                 for cid, sp, s in zip(ids, speeds, shards)]
 
     def run_round(self, eval_now: bool = False):
@@ -338,6 +376,11 @@ def build_population(cfg: PopulationConfig, mesh=None) -> PopulationSim:
     if cfg.backend not in BACKEND_NAMES:
         raise ValueError(f"backend must be one of {BACKEND_NAMES}, "
                          f"got {cfg.backend!r}")
+    if cfg.async_cfg is not None and cfg.backend != "async":
+        raise ValueError("async_cfg only applies to backend='async'")
+    if cfg.backend == "async" and cfg.n_shards is not None:
+        raise ValueError("backend='async' does not shard (dispatch groups "
+                         "are buffer_k-sized fleet programs)")
     ds_name, model_name, lr, bs = WORKLOADS[cfg.workload]
     model_cls = (MODELS[model_name] if model_name in MODELS
                  else KERNEL_MODELS[model_name])
@@ -366,5 +409,9 @@ def build_population(cfg: PopulationConfig, mesh=None) -> PopulationSim:
                        straggler_frac=cfg.straggler_frac, seed=cfg.seed)
     server = FluidServer(params, model_cls.UNIT_SPECS, cfg=fcfg,
                          eval_fn=eval_fn, store=store)
-    return PopulationSim(cfg, store, server, model_cls, ds, parts,
-                         lr=lr, batch_size=bs, mesh=mesh)
+    sim = PopulationSim(cfg, store, server, model_cls, ds, parts,
+                        lr=lr, batch_size=bs, mesh=mesh)
+    if cfg.backend == "async":
+        from repro.fl.async_rounds import AsyncPopulationSim
+        return AsyncPopulationSim(sim)
+    return sim

@@ -18,12 +18,22 @@ physically extracted sub-models); FleetBackend runs the whole cohort as
 one vmapped program (fl/fleet.py); ShardedFleetBackend runs that same
 program under shard_map over a mesh's data axis (fl/shard_fleet.py). All
 three agree up to float summation order (tests/test_population.py,
-tests/test_fleet.py).
+tests/test_fleet.py). AsyncBufferedBackend (fl/async_rounds.py) drops the
+barrier entirely: `run_round` dispatches the cohort and then drains the
+first K *arrivals* off the EventLoop below — round membership becomes
+data-dependent, and the result carries staleness per arrival.
+
+This module also owns the virtual clock those arrivals ride on: EventLoop
+is a deterministic (time, push-order) heap, so a zero-latency-spread run
+resolves ties in dispatch order and the whole async schedule reproduces
+from the seeds alone.
 """
 from __future__ import annotations
 
+import heapq
+
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Protocol, Sequence
+from typing import Dict, List, Optional, Protocol, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -34,7 +44,35 @@ from repro.core.aggregate import ClientUpdate, aggregate
 from repro.fl.fleet import FleetEngine
 from repro.fl.shard_fleet import ShardedFleetEngine
 
-BACKEND_NAMES = ("sequential", "fleet", "sharded_fleet")
+BACKEND_NAMES = ("sequential", "fleet", "sharded_fleet", "async")
+
+
+class EventLoop:
+    """Virtual-clock event queue for emulated asynchrony.
+
+    `push(t, payload)` schedules; `pop()` returns the earliest event and
+    advances `now` monotonically (a pop never rewinds the clock, even if
+    an event was scheduled in the past relative to a later dispatch).
+    Ties on `t` break by push order — with zero latency spread the async
+    backend therefore drains arrivals in exactly the order it dispatched
+    them, which the fleet==async equivalence test pins."""
+
+    def __init__(self):
+        self._heap: List[Tuple[float, int, object]] = []
+        self._seq = 0
+        self.now = 0.0
+
+    def push(self, t: float, payload) -> None:
+        heapq.heappush(self._heap, (float(t), self._seq, payload))
+        self._seq += 1
+
+    def pop(self):
+        t, _, payload = heapq.heappop(self._heap)
+        self.now = max(self.now, t)
+        return t, payload
+
+    def __len__(self) -> int:
+        return len(self._heap)
 
 
 class RoundResult(Protocol):
@@ -135,13 +173,28 @@ class ShardedFleetBackend(FleetBackend):
 
 def make_backend(name: str, model_cls, clients, unit_specs,
                  use_kernels: bool = False, mesh=None,
-                 n_shards: Optional[int] = None) -> RoundBackend:
+                 n_shards: Optional[int] = None,
+                 async_cfg=None) -> RoundBackend:
     """Construct a RoundBackend for one cohort.
 
     sharded_fleet resolves its shard count as: explicit n_shards if given,
     else the largest device count that divides the cohort
     (gcd(|cohort|, data-axis devices)) — degenerating to an unsharded
-    1-device mesh rather than erroring on awkward cohort sizes."""
+    1-device mesh rather than erroring on awkward cohort sizes.
+
+    "async" constructs an AsyncBufferedBackend with `clients` as its first
+    dispatch group. Unlike the synchronous backends it is STATEFUL across
+    rounds (virtual clock, in-flight arrival heap, server version) — reuse
+    the same instance and re-point `set_dispatch(...)` per round, as
+    fl/async_rounds.AsyncPopulationSim does; building a fresh one per
+    round silently discards every in-flight client."""
+    if name == "async":
+        from repro.fl.async_rounds import AsyncBufferedBackend, AsyncConfig
+        backend = AsyncBufferedBackend(model_cls, unit_specs,
+                                       async_cfg or AsyncConfig(),
+                                       use_kernels=use_kernels)
+        backend.set_dispatch(clients)
+        return backend
     if name == "sequential":
         return SequentialBackend(clients, unit_specs)
     if name == "fleet":

@@ -33,7 +33,10 @@ from repro.fl.rounds import BACKEND_NAMES, make_backend
 from repro.models.kernel_models import KERNEL_MODELS
 from repro.models.small import MODELS
 
-BACKENDS = BACKEND_NAMES               # ("sequential", "fleet", "sharded_fleet")
+# The small-cohort simulation drives synchronous barriers only; the async
+# buffered backend is stateful across rounds and needs the population
+# driver's in-flight bookkeeping (fl/async_rounds.AsyncPopulationSim).
+BACKENDS = tuple(n for n in BACKEND_NAMES if n != "async")
 
 WORKLOADS = {
     "femnist": ("femnist", "femnist_cnn", 0.004, 10),
@@ -105,6 +108,11 @@ class SimulationConfig:
         if self.workload not in WORKLOADS:
             raise ValueError(f"workload must be one of "
                              f"{tuple(WORKLOADS)}, got {self.workload!r}")
+        if self.backend == "async":
+            raise ValueError(
+                "backend='async' is population-scale only — use "
+                "build_population(PopulationConfig(backend='async', "
+                "async_cfg=AsyncConfig(...)))")
         if self.backend not in BACKENDS:
             raise ValueError(f"backend must be one of {BACKENDS}, "
                              f"got {self.backend!r}")

@@ -68,6 +68,26 @@ def test_store_sample_cohort_deterministic_and_active_only():
     assert not np.array_equal(ids, other)              # keys decorrelate
 
 
+def test_store_sample_cohort_oversized_request_raises():
+    """Regression: asking for more clients than are active used to hand
+    back inactive slots silently — top_k pads the Gumbel scores' -inf tail
+    with whatever indices it likes, and downstream code materialized them
+    as zero-speed phantom clients."""
+    st = ClientStore.empty(50).register(np.arange(0, 50, 2),
+                                        np.full(25, 10.0), np.zeros(25))
+    key = jax.random.PRNGKey(0)
+    with pytest.raises(ValueError, match="requested 26 .* only 25"):
+        st.sample_cohort(key, 26)
+    # exactly the active count is fine, and stays active-only
+    ids = np.asarray(st.sample_cohort(key, 25))
+    assert np.all(ids % 2 == 0)
+    # in-flight clients shrink the *available* pool, not the active one
+    st2 = st.mark_in_flight([0, 2], True)
+    with pytest.raises(ValueError, match="only 23 are available"):
+        st2.sample_cohort(key, 24, available_only=True)
+    assert len(np.asarray(st2.sample_cohort(key, 25))) == 25
+
+
 def test_store_update_from_round_ring_and_ema():
     st = ClientStore.empty(10, history=3).register([0, 1], [10.0, 13.0],
                                                    [0, 0])

@@ -16,6 +16,30 @@ def test_detect_by_frac():
     assert sg.detect_stragglers(lat, frac=0.2) == [0]
 
 
+def test_detect_frac_zero_selects_nobody():
+    """Regression: frac=0.0 used to flag the slowest client anyway via the
+    unconditional max(1, ...) floor, so "dropout off" configs silently ran
+    dropout on one client per round."""
+    lat = {0: 13.0, 1: 10.0, 2: 10.2, 3: 9.9, 4: 10.1}
+    assert sg.detect_stragglers(lat, frac=0.0) == []
+    p = sg.plan(lat, frac=0.0)
+    assert p.stragglers == [] and p.rates == {}
+    # any positive frac still selects at least one
+    assert sg.detect_stragglers(lat, frac=1e-9) == [0]
+    assert sg.detect_stragglers(lat, frac=1.0) == [0, 2, 4, 1, 3]
+
+
+def test_detect_frac_out_of_range_raises():
+    lat = {0: 13.0, 1: 10.0}
+    for bad in (-0.1, 1.5, 2.0):
+        try:
+            sg.detect_stragglers(lat, frac=bad)
+        except ValueError as e:
+            assert "frac" in str(e)
+        else:
+            raise AssertionError(f"frac={bad} was accepted")
+
+
 def test_detect_auto_gap():
     lat = {0: 13.0, 1: 10.0, 2: 10.2, 3: 9.9, 4: 10.1}
     assert sg.detect_stragglers(lat) == [0]
